@@ -1,0 +1,30 @@
+"""Reproduction of the paper's Fig. 5: compilation time vs CGRA size for the
+`aes` benchmark — ours stays flat, the joint baseline grows with grid size."""
+
+from __future__ import annotations
+
+from repro.core.baseline import map_dfg_joint
+from repro.core.benchsuite import load_suite
+from repro.core.cgra import CGRA
+from repro.core.mapper import map_dfg
+
+
+def run(*, sizes=(2, 4, 6, 8, 10, 14, 20), joint_budget_s: float = 60.0,
+        run_joint: bool = True) -> list[dict]:
+    dfg = load_suite()["aes"]
+    rows = []
+    for size in sizes:
+        cgra = CGRA(size, size)
+        ours = map_dfg(dfg, cgra, time_budget_s=30)
+        row = {
+            "size": size,
+            "ours_time_s": round(ours.stats.total_s, 3),
+            "ours_II": ours.mapping.ii if ours.ok else None,
+        }
+        if run_joint:
+            joint = map_dfg_joint(dfg, cgra, time_budget_s=joint_budget_s)
+            row["joint_time_s"] = round(joint.stats.total_s, 3)
+            row["joint_II"] = joint.mapping.ii if joint.ok else None
+        rows.append(row)
+        print(row, flush=True)
+    return rows

@@ -1,0 +1,75 @@
+"""Reproduction of the paper's Table III: II + compilation time, ours
+(decoupled monomorphism mapper) vs the joint SAT-MapIt-style baseline, on
+2x2 / 5x5 / 10x10 / 20x20 CGRAs over the 17-benchmark suite.
+
+Timeouts are scaled down from the paper's 4000s to fit the container budget
+(the metric of record is the compilation-time *ratio* CTR and II parity).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.baseline import map_dfg_joint
+from repro.core.benchsuite import load_suite
+from repro.core.cgra import CGRA
+from repro.core.mapper import map_dfg
+
+SIZES = (2, 5, 10, 20)
+
+
+def run(
+    *,
+    ours_budget_s: float = 60.0,
+    joint_budget_s: float = 60.0,
+    sizes=SIZES,
+    benchmarks=None,
+    run_joint: bool = True,
+) -> list[dict]:
+    suite = load_suite()
+    if benchmarks:
+        suite = {k: v for k, v in suite.items() if k in benchmarks}
+    rows = []
+    for size in sizes:
+        cgra = CGRA(size, size)
+        for name, dfg in suite.items():
+            ours = map_dfg(dfg, cgra, time_budget_s=ours_budget_s)
+            row = {
+                "bench": name,
+                "size": size,
+                "nodes": dfg.num_nodes,
+                "mII": ours.stats.m_ii,
+                "ours_II": ours.mapping.ii if ours.ok else None,
+                "ours_time_s": round(ours.stats.total_s, 3),
+                "ours_time_phase_s": round(ours.stats.time_phase_s, 3),
+                "ours_space_phase_s": round(ours.stats.space_phase_s, 4),
+                "mono_failures": ours.stats.mono_failures,
+            }
+            if run_joint:
+                joint = map_dfg_joint(dfg, cgra, time_budget_s=joint_budget_s)
+                row["joint_II"] = joint.mapping.ii if joint.ok else None
+                row["joint_time_s"] = round(joint.stats.total_s, 3)
+                if ours.ok and joint.ok:
+                    row["ctr"] = round(joint.stats.total_s / max(1e-3, ours.stats.total_s), 2)
+                    row["same_ii"] = ours.mapping.ii == joint.mapping.ii
+            rows.append(row)
+            print(row, flush=True)
+    return rows
+
+
+def summarize(rows: list[dict]) -> list[str]:
+    lines = []
+    for size in sorted({r["size"] for r in rows}):
+        rs = [r for r in rows if r["size"] == size]
+        both = [r for r in rs if r.get("ours_II") and r.get("joint_II")]
+        if both:
+            avg_ctr = sum(r["ctr"] for r in both) / len(both)
+            same = sum(1 for r in both if r["same_ii"])
+            better = sum(1 for r in both if r["ours_II"] < r["joint_II"])
+            lines.append(
+                f"{size}x{size}: avg CTR (joint/ours) = {avg_ctr:.2f}x over "
+                f"{len(both)} co-solved cases; same II {same}, ours better {better}"
+            )
+        solved = sum(1 for r in rs if r.get("ours_II"))
+        lines.append(f"{size}x{size}: ours solved {solved}/{len(rs)}")
+    return lines

@@ -1,0 +1,71 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  table3   — II + compile time, decoupled vs joint mapper (paper Tab. III)
+  fig5     — compile time vs CGRA size for `aes` (paper Fig. 5)
+  kernels  — Pallas kernel micro-benchmarks
+
+Prints ``name,us_per_call,derived`` CSV at the end. Full sweep:
+``PYTHONPATH=src python -m benchmarks.run``; quick subset with ``--quick``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small subset, short timeouts")
+    ap.add_argument("--skip-joint", action="store_true")
+    ap.add_argument("--only", choices=["table3", "fig5", "kernels"])
+    args = ap.parse_args(argv)
+
+    from benchmarks import bench_fig5, bench_kernels, bench_table3
+
+    csv_rows: list[tuple[str, float, str]] = []
+
+    if args.only in (None, "table3"):
+        kw = dict(run_joint=not args.skip_joint)
+        if args.quick:
+            kw.update(sizes=(2, 5), ours_budget_s=20, joint_budget_s=20,
+                      benchmarks=["bitcount", "fft", "gsm", "susan", "aes"])
+        else:
+            kw.update(ours_budget_s=60, joint_budget_s=60)
+        rows = bench_table3.run(**kw)
+        for line in bench_table3.summarize(rows):
+            print("TABLE3:", line)
+        for r in rows:
+            csv_rows.append(
+                (
+                    f"table3_{r['bench']}_{r['size']}x{r['size']}",
+                    r["ours_time_s"] * 1e6,
+                    f"II={r.get('ours_II')};mII={r['mII']};CTR={r.get('ctr', '')}",
+                )
+            )
+
+    if args.only in (None, "fig5"):
+        sizes = (2, 5, 10) if args.quick else (2, 4, 6, 8, 10, 14, 20)
+        rows = bench_fig5.run(sizes=sizes, run_joint=not args.skip_joint,
+                              joint_budget_s=20 if args.quick else 60)
+        for r in rows:
+            csv_rows.append(
+                (
+                    f"fig5_aes_{r['size']}x{r['size']}",
+                    r["ours_time_s"] * 1e6,
+                    f"joint_s={r.get('joint_time_s', '')}",
+                )
+            )
+
+    if args.only in (None, "kernels"):
+        for r in bench_kernels.run():
+            csv_rows.append((r["name"], r["us_per_call"], r["derived"]))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

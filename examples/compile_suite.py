@@ -1,0 +1,37 @@
+"""Compile the full 17-benchmark suite (paper §V) on a chosen CGRA size.
+
+    PYTHONPATH=src python examples/compile_suite.py [size] [--joint]
+"""
+
+import sys
+
+from repro.core import CGRA, map_dfg
+from repro.core.benchsuite import load_suite
+from repro.core.simulate import check_equivalence
+
+size = int(sys.argv[1]) if len(sys.argv) > 1 else 5
+run_joint = "--joint" in sys.argv
+cgra = CGRA(size, size)
+print(f"=== {size}x{size} CGRA, 17 benchmarks ===")
+
+for name, dfg in load_suite().items():
+    res = map_dfg(dfg, cgra, time_budget_s=30)
+    if not res.ok:
+        print(f"{name:16s} n={dfg.num_nodes:3d} FAILED ({res.reason})")
+        continue
+    check_equivalence(res.mapping, num_iters=4)
+    line = (
+        f"{name:16s} n={dfg.num_nodes:3d} II={res.mapping.ii:3d} "
+        f"(mII={res.stats.m_ii:3d}) time={res.stats.time_phase_s:6.3f}s "
+        f"space={res.stats.space_phase_s:7.4f}s"
+    )
+    if run_joint:
+        from repro.core.baseline import map_dfg_joint
+
+        j = map_dfg_joint(dfg, cgra, time_budget_s=60)
+        line += (
+            f" | joint II={j.mapping.ii if j.ok else '--'} "
+            f"t={j.stats.total_s:6.1f}s "
+            f"CTR={j.stats.total_s / max(1e-3, res.stats.total_s):7.1f}x"
+        )
+    print(line)

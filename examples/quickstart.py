@@ -1,0 +1,47 @@
+"""Quickstart: map a loop DFG onto a CGRA with the paper's decoupled mapper,
+validate it by execution, and run it batched through the Pallas kernel.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import CGRA, map_dfg, running_example
+from repro.core.simulate import check_equivalence
+from repro.kernels.ops import cgra_run, compile_program
+
+# 1. the paper's running example: 14-op loop body with two loop-carried deps
+dfg = running_example()
+cgra = CGRA(2, 2)
+
+# 2. decoupled mapping: SMT time solution -> monomorphism space solution
+result = map_dfg(dfg, cgra)
+assert result.ok, result.reason
+m = result.mapping
+print(m.pretty())
+print(
+    f"time phase {result.stats.time_phase_s*1e3:.1f} ms, "
+    f"space phase {result.stats.space_phase_s*1e3:.1f} ms "
+    f"(II={m.ii}, mII={result.stats.m_ii})"
+)
+
+# 3. validate by execution: cycle-accurate modulo-scheduled run == reference
+report = check_equivalence(m, num_iters=8)
+print(f"functional equivalence OK over {report.cycles} cycles; "
+      f"max register pressure {max(report.max_register_pressure.values())}")
+
+# 4. run 256 independent instances of the loop through the Pallas CGRA kernel
+prog = compile_program(m)
+rng = np.random.default_rng(0)
+inputs = {
+    v: rng.uniform(-2, 2, (8, 256)).astype(np.float32)
+    for v in dfg.nodes
+    if dfg.ops[v] == "input"
+}
+outs, trace = cgra_run(prog, inputs, num_iters=8)
+# read the sink node's stream from the trace (the running example's final op)
+sink = max(dfg.nodes, key=lambda v: m.t_abs[v])
+cycles = [m.t_abs[sink] + it * m.ii for it in range(8)]
+stream = trace[cycles, m.placement[sink], :]
+print(f"pallas cgra_sim: sink node {sink} stream {stream.shape} (iters x batch); "
+      f"sample: {stream[:3, 0]}")

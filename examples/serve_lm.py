@@ -1,0 +1,21 @@
+"""Batched serving example: queue of requests through prefill + decode.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma2-9b]
+"""
+
+import argparse
+
+from repro.launch import serve as serve_mod
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="gemma2-9b")
+args = ap.parse_args()
+
+serve_mod.main([
+    "--arch", args.arch,
+    "--reduced",
+    "--requests", "12",
+    "--batch", "4",
+    "--prompt-len", "24",
+    "--gen", "12",
+])

@@ -1,0 +1,37 @@
+"""End-to-end training driver: ~100M-parameter qwen3-family model for a few
+hundred steps on synthetic data, with checkpointing + fault-tolerant runner.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    args = ap.parse_args()
+
+    # ~100M-parameter variant of the qwen3 family (CPU-trainable)
+    report = train_mod.main([
+        "--arch", args.arch,
+        "--steps", str(args.steps),
+        "--batch", "8",
+        "--seq", "128",
+        "--reduced",
+        "--ckpt-dir", "/tmp/repro_example_ckpt",
+    ])
+    assert report.losses[-1] < report.losses[0], "loss must decrease"
+    print("training example OK — loss decreased "
+          f"{report.losses[0]:.3f} -> {report.losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

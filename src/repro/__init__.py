@@ -1,0 +1,19 @@
+"""repro: monomorphism-based CGRA mapping (space/time decoupled) + a
+production-grade multi-pod JAX training/serving framework built around it.
+
+Subpackages
+-----------
+core       the paper's mapping algorithm (SMT time + monomorphism space)
+kernels    Pallas TPU kernels (CGRA functional simulator, flash attention)
+models     LM model zoo for the 10 assigned architectures
+configs    one config per architecture, selectable via --arch
+data       sharded input pipelines
+optim      optimizers, LR schedules, gradient compression
+checkpoint sharding-aware async checkpointing
+runtime    fault tolerance, elastic scaling, straggler mitigation
+sharding   logical-axis sharding rules for pjit
+launch     production mesh, multi-pod dry-run, train/serve drivers
+roofline   compiled-artifact roofline analysis
+"""
+
+__version__ = "1.0.0"

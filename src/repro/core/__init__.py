@@ -1,0 +1,34 @@
+"""Core library: monomorphism-based CGRA mapping via space/time decoupling.
+
+The paper's contribution lives here: schedule.py (ASAP/ALAP/MobS/KMS/mII),
+time_smt.py (SMT time solution), mono.py (monomorphism space solution),
+mapper.py (the decoupled pipeline), baseline.py (joint SAT-MapIt-style
+comparison target), benchsuite.py (Table III DFG suite), simulate.py
+(functional validation), placement.py (the same algorithm placing model stage
+graphs onto TPU pod meshes).
+"""
+
+from .cgra import CGRA, MRRG
+from .dfg import DFG, Edge, running_example
+from .mapper import Mapping, MapResult, map_dfg
+from .mono import check_monomorphism, find_monomorphism
+from .schedule import (
+    KMS,
+    MobilitySchedule,
+    alap_schedule,
+    asap_schedule,
+    min_ii,
+    mobility_schedule,
+    rec_ii,
+    res_ii,
+)
+from .time_smt import TimeSolution, TimeSolver, check_time_solution
+
+__all__ = [
+    "CGRA", "MRRG", "DFG", "Edge", "running_example",
+    "Mapping", "MapResult", "map_dfg",
+    "check_monomorphism", "find_monomorphism",
+    "KMS", "MobilitySchedule", "alap_schedule", "asap_schedule",
+    "min_ii", "mobility_schedule", "rec_ii", "res_ii",
+    "TimeSolution", "TimeSolver", "check_time_solution",
+]

@@ -1,0 +1,138 @@
+"""CGRA architecture model and MRRG construction (paper §III, §IV-A).
+
+The target architecture (paper §V, and its §V-3 limitation) is an R×C grid of
+PEs where every PE can read the register files of its mesh neighbours and its
+own. A produced value persists in the producer's register file, so a dependency
+u→v is spatially routable iff PE(u) is PE(v) itself or a neighbour — regardless
+of the time gap (modulo the II wrap for loop-carried deps). This is what makes
+the paper's space/time decoupling sound, and it is the architecture we model.
+
+``topology`` extends the paper's mesh with a torus option, used when the same
+machinery places computation stage graphs onto TPU pod slices (ICI is a torus);
+see core/placement.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+
+
+@dataclass(frozen=True)
+class CGRA:
+    rows: int
+    cols: int
+    topology: str = "mesh"          # "mesh" (paper) | "torus" (TPU ICI)
+    registers_per_pe: int = 8       # modelled but unconstrained by default (§V-3)
+
+    def __post_init__(self) -> None:
+        if self.rows < 1 or self.cols < 1:
+            raise ValueError("CGRA must have at least one PE")
+        if self.topology not in ("mesh", "torus"):
+            raise ValueError(f"unknown topology {self.topology!r}")
+
+    @property
+    def num_pes(self) -> int:
+        return self.rows * self.cols
+
+    def pe_index(self, r: int, c: int) -> int:
+        return r * self.cols + c
+
+    def pe_coords(self, pe: int) -> tuple[int, int]:
+        return divmod(pe, self.cols)
+
+    @cached_property
+    def neighbors(self) -> tuple[tuple[int, ...], ...]:
+        """Mesh/torus neighbours of each PE, *excluding* the PE itself."""
+        out: list[tuple[int, ...]] = []
+        for pe in range(self.num_pes):
+            r, c = self.pe_coords(pe)
+            nbrs: set[int] = set()
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                rr, cc = r + dr, c + dc
+                if self.topology == "torus":
+                    rr %= self.rows
+                    cc %= self.cols
+                    if (rr, cc) != (r, c):
+                        nbrs.add(self.pe_index(rr, cc))
+                elif 0 <= rr < self.rows and 0 <= cc < self.cols:
+                    nbrs.add(self.pe_index(rr, cc))
+            out.append(tuple(sorted(nbrs)))  # sorted for determinism
+        return tuple(out)
+
+    @cached_property
+    def adjacency(self) -> tuple[tuple[bool, ...], ...]:
+        """Closed adjacency (self-loop included): routability predicate."""
+        adj = [[False] * self.num_pes for _ in range(self.num_pes)]
+        for pe in range(self.num_pes):
+            adj[pe][pe] = True
+            for nb in self.neighbors[pe]:
+                adj[pe][nb] = True
+        return tuple(tuple(row) for row in adj)
+
+    @property
+    def connectivity_degree(self) -> int:
+        """Paper's D_M: max closed neighbourhood size (self + mesh neighbours).
+
+        D_M = 3 for 2x2, 5 for 3x3 and larger meshes, matching §IV-B3.
+        """
+        return max(len(n) for n in self.neighbors) + 1
+
+    def __str__(self) -> str:  # pragma: no cover
+        return f"CGRA({self.rows}x{self.cols},{self.topology})"
+
+
+@dataclass(frozen=True)
+class MRRG:
+    """Modulo Routing Resource Graph: II stacked copies of the CGRA (§IV-A).
+
+    Vertices are (pe, t) with t in [0, II). l_M((pe, t)) = t. Spatial edges
+    connect PEs adjacent in the CGRA at equal time; time edges connect a PE's
+    closed neighbourhood across consecutive steps (values persisting in
+    register files make any time gap routable, which we encode directly in the
+    ``routable`` predicate used by the monomorphism search instead of
+    materialising the transitive closure).
+    """
+
+    cgra: CGRA
+    ii: int
+
+    @property
+    def num_vertices(self) -> int:
+        return self.cgra.num_pes * self.ii
+
+    def vertex(self, pe: int, t: int) -> int:
+        return t * self.cgra.num_pes + pe
+
+    def vertex_pe_time(self, v: int) -> tuple[int, int]:
+        t, pe = divmod(v, self.cgra.num_pes)
+        return pe, t
+
+    def label(self, v: int) -> int:
+        return v // self.cgra.num_pes
+
+    def routable(self, pe_u: int, pe_v: int) -> bool:
+        """Edge-existence predicate used by mono3: closed mesh adjacency."""
+        return self.cgra.adjacency[pe_u][pe_v]
+
+    def edges(self):
+        """Materialised undirected edge set {(pe,t),(pe',t')} per the paper.
+
+        Spatial edges at each step + time edges between consecutive steps
+        (including the II wrap, since the kernel repeats). Only used by tests
+        and visualisation; the search uses ``routable``.
+        """
+        n = self.cgra.num_pes
+        for t in range(self.ii):
+            for pe in range(n):
+                for nb in self.cgra.neighbors[pe]:
+                    if pe < nb:
+                        yield (self.vertex(pe, t), self.vertex(nb, t))
+            t2 = (t + 1) % self.ii
+            if t2 == t:
+                continue
+            for pe in range(n):
+                # self-loop across time + neighbour reads across time
+                yield (self.vertex(pe, t), self.vertex(pe, t2))
+                for nb in self.cgra.neighbors[pe]:
+                    yield (self.vertex(pe, t), self.vertex(nb, t2))

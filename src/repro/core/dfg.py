@@ -1,0 +1,252 @@
+"""Data-flow graph (DFG) representation for CGRA mapping.
+
+A DFG models one loop body after LLVM-style extraction: nodes are single-cycle
+operations (loads, ALU ops, stores), edges are data dependencies. Loop-carried
+dependencies close recurrence cycles with an iteration *distance* (usually 1).
+
+The paper (§IV-A) ultimately treats the DFG as an *undirected, labelled* graph
+once a time solution is found; we keep the directed + distance-annotated form as
+the source of truth and derive the undirected view on demand.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping, Sequence
+
+# Operation kinds understood by the functional simulator (core/simulate.py) and
+# the cgra_sim Pallas kernel. Arity is used by DFG validation.
+OP_ARITY = {
+    "input": 0,   # live-in (loop invariant or streamed input)
+    "const": 0,
+    "load": 1,    # load base+offset (address operand)
+    "store": 1,   # value operand (address folded into the op immediate)
+    "add": 2,
+    "sub": 2,
+    "mul": 2,
+    "div": 2,
+    "and": 2,
+    "or": 2,
+    "xor": 2,
+    "shl": 2,
+    "shr": 2,
+    "min": 2,
+    "max": 2,
+    "neg": 1,
+    "not": 1,
+    "abs": 1,
+    "mov": 1,     # copy / route-through
+    "phi": 2,     # loop-carried merge
+    "cmp": 2,
+}
+
+
+@dataclass(frozen=True)
+class Edge:
+    """Directed dependency src -> dst.
+
+    distance == 0: intra-iteration data dependency.
+    distance >= 1: loop-carried dependency (value produced `distance`
+    iterations before it is consumed).
+    """
+
+    src: int
+    dst: int
+    distance: int = 0
+
+    def __post_init__(self) -> None:
+        if self.distance < 0:
+            raise ValueError(f"negative dependency distance on edge {self}")
+
+
+@dataclass
+class DFG:
+    """A directed data-flow graph with loop-carried distances."""
+
+    num_nodes: int
+    edges: list[Edge]
+    ops: list[str] = field(default_factory=list)
+    name: str = "dfg"
+    # Optional per-node immediate (e.g. constant value / address offset).
+    imms: list[float] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if not self.ops:
+            self.ops = ["add"] * self.num_nodes
+        if not self.imms:
+            self.imms = [0.0] * self.num_nodes
+        if len(self.ops) != self.num_nodes or len(self.imms) != self.num_nodes:
+            raise ValueError(f"{self.name}: ops/imms length mismatch with num_nodes")
+        for e in self.edges:
+            if not (0 <= e.src < self.num_nodes and 0 <= e.dst < self.num_nodes):
+                raise ValueError(f"{self.name}: edge {e} out of range")
+
+    # ------------------------------------------------------------------ views
+    @property
+    def nodes(self) -> range:
+        return range(self.num_nodes)
+
+    def predecessors(self, v: int, *, carried: bool | None = None) -> list[Edge]:
+        return [
+            e
+            for e in self.edges
+            if e.dst == v
+            and (carried is None or (e.distance > 0) == carried)
+        ]
+
+    def successors(self, v: int, *, carried: bool | None = None) -> list[Edge]:
+        return [
+            e
+            for e in self.edges
+            if e.src == v
+            and (carried is None or (e.distance > 0) == carried)
+        ]
+
+    def undirected_adjacency(self) -> list[set[int]]:
+        """Paper §IV-B: after scheduling, edge direction is dropped."""
+        adj: list[set[int]] = [set() for _ in self.nodes]
+        for e in self.edges:
+            if e.src != e.dst:
+                adj[e.src].add(e.dst)
+                adj[e.dst].add(e.src)
+        return adj
+
+    def intra_edges(self) -> list[Edge]:
+        return [e for e in self.edges if e.distance == 0]
+
+    def carried_edges(self) -> list[Edge]:
+        return [e for e in self.edges if e.distance > 0]
+
+    # ------------------------------------------------------------- validation
+    def validate(self) -> None:
+        """Check the intra-iteration subgraph is a DAG and arities are sane."""
+        indeg = [0] * self.num_nodes
+        adj: list[list[int]] = [[] for _ in self.nodes]
+        for e in self.intra_edges():
+            adj[e.src].append(e.dst)
+            indeg[e.dst] += 1
+        frontier = [v for v in self.nodes if indeg[v] == 0]
+        seen = 0
+        while frontier:
+            v = frontier.pop()
+            seen += 1
+            for w in adj[v]:
+                indeg[w] -= 1
+                if indeg[w] == 0:
+                    frontier.append(w)
+        if seen != self.num_nodes:
+            raise ValueError(f"{self.name}: intra-iteration dependency cycle (needs distance>=1)")
+        for v in self.nodes:
+            op = self.ops[v]
+            if op not in OP_ARITY:
+                raise ValueError(f"{self.name}: unknown op {op!r} at node {v}")
+            np_ = len(self.predecessors(v))
+            if op in ("input", "const") and np_ != 0:
+                raise ValueError(f"{self.name}: node {v} ({op}) must have no inputs")
+            if OP_ARITY[op] > 0 and np_ > OP_ARITY[op]:
+                raise ValueError(
+                    f"{self.name}: node {v} ({op}) has {np_} inputs > arity {OP_ARITY[op]}"
+                )
+
+    # ---------------------------------------------------------- recurrence II
+    def rec_ii(self) -> int:
+        """RecII = max over dependence cycles of ceil(length/distance).
+
+        Single-cycle ops => cycle length = #edges in the cycle. Computed with a
+        Bellman-Ford style iteration: for a candidate II, edge (u,v,dist) imposes
+        t_v >= t_u + 1 - II*dist; a positive cycle in that constraint graph means
+        II is infeasible. RecII is the smallest feasible II. DFG sizes here are
+        tens of nodes, so the O(V*E*II) search is trivial.
+        """
+        if not self.edges:
+            return 1
+        max_ii = max(2, self.num_nodes + 1)
+        for ii in range(1, max_ii + 1):
+            if self._feasible_ii(ii):
+                return ii
+        return max_ii
+
+    def _feasible_ii(self, ii: int) -> bool:
+        dist = [0] * self.num_nodes
+        for _ in range(self.num_nodes):
+            changed = False
+            for e in self.edges:
+                w = 1 - ii * e.distance
+                if dist[e.src] + w > dist[e.dst]:
+                    dist[e.dst] = dist[e.src] + w
+                    changed = True
+            if not changed:
+                return True
+        # one more relaxation round: still-changing => positive cycle
+        for e in self.edges:
+            if dist[e.src] + (1 - ii * e.distance) > dist[e.dst]:
+                return False
+        return True
+
+    # ------------------------------------------------------------------- I/O
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "name": self.name,
+                "num_nodes": self.num_nodes,
+                "ops": self.ops,
+                "imms": self.imms,
+                "edges": [[e.src, e.dst, e.distance] for e in self.edges],
+            },
+            indent=2,
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "DFG":
+        d = json.loads(text)
+        return cls(
+            num_nodes=d["num_nodes"],
+            edges=[Edge(*e) for e in d["edges"]],
+            ops=d.get("ops", []),
+            imms=d.get("imms", []),
+            name=d.get("name", "dfg"),
+        )
+
+    @classmethod
+    def from_edge_list(
+        cls,
+        num_nodes: int,
+        edges: Iterable[tuple[int, int] | tuple[int, int, int]],
+        *,
+        ops: Sequence[str] | None = None,
+        name: str = "dfg",
+    ) -> "DFG":
+        es = [Edge(*((*e, 0)[:3])) for e in edges]
+        return cls(num_nodes=num_nodes, edges=es, ops=list(ops or []), name=name)
+
+
+def running_example() -> DFG:
+    """The paper's 14-node running example (Fig. 2a), reconstructed.
+
+    Exact edge identities in the figure are partially illegible in the text;
+    we reconstruct a 14-node DFG whose ASAP/ALAP/MobS match Tab. I exactly
+    (verified in tests/test_schedule.py) and whose RecII = 4, giving
+    mII = max(ceil(14/4), 4) = 4 on a 2x2 CGRA as in the paper.
+    """
+    # ASAP rows (Tab. I): t0: 0 1 2 3 4 | t1: 5 11 | t2: 6 12 | t3: 7 8 13 | t4: 9 | t5: 10
+    # ALAP rows:          t0: 4 | t1: 3 5 | t2: 0 2 6 | t3: 1 8 11 | t4: 7 9 12 | t5: 10 13
+    edges = [
+        # intra-iteration data dependencies (black edges)
+        Edge(4, 5),    # 4 alap0 -> 5 (asap1, alap1)
+        Edge(5, 6), Edge(3, 6),         # 6: asap2, alap2; pins alap(3)=1
+        Edge(6, 7), Edge(1, 7),         # 7: asap3, alap4; pins alap(1)=3
+        Edge(6, 8), Edge(2, 8),         # 8: asap3, alap3; pins alap(2)=2
+        Edge(8, 9),                     # 9: asap4, alap4
+        Edge(9, 10), Edge(7, 10),       # 10: asap5, alap5 (sink)
+        Edge(0, 11), Edge(11, 12), Edge(12, 13),  # 11..13 side chain; pins alap(0)=2
+        # loop-carried dependencies (red edges); close RecII=4 cycle 5-6-8-9
+        Edge(9, 5, 1),
+        Edge(13, 11, 1),
+    ]
+    ops = [
+        "input", "input", "input", "input", "input",
+        "phi", "add", "mul", "sub", "add",
+        "add", "phi", "mul", "add",
+    ]
+    return DFG(num_nodes=14, edges=edges, ops=ops, name="running_example")

@@ -1,0 +1,215 @@
+"""End-to-end space/time-decoupled CGRA mapper (paper §IV).
+
+Pipeline per II (starting at mII = max(ResII, RecII)):
+
+  1. TIME  — SMT search over the KMS window for a schedule satisfying the
+     modulo-scheduling + capacity + connectivity constraints (time_smt.py).
+  2. SPACE — monomorphism search embedding the labelled DFG into the MRRG
+     (mono.py).
+  3. If the space search fails (possible: the published constraints are
+     necessary but not sufficient, see DESIGN.md §7), the time solution is
+     excluded with a blocking clause and step 1 re-runs — a completeness
+     backstop the paper does not need in 67/68 cases and we rarely hit.
+
+If no (time, space) pair exists within the II's KMS window, the window is
+relaxed (schedule-length slack) and finally II is incremented.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+
+from .cgra import CGRA
+from .dfg import DFG
+from .mono import SpaceStats, check_monomorphism, find_monomorphism
+from .schedule import min_ii, rec_ii, res_ii
+from .time_smt import TimeSolution, TimeSolver, check_time_solution
+
+
+@dataclass
+class Mapping:
+    """A complete space-time mapping of a DFG onto a CGRA."""
+
+    dfg: DFG
+    cgra: CGRA
+    ii: int
+    t_abs: list[int]                 # absolute schedule time per node
+    placement: list[int]             # PE per node
+
+    @property
+    def labels(self) -> list[int]:
+        return [t % self.ii for t in self.t_abs]
+
+    @property
+    def folds(self) -> list[int]:
+        return [t // self.ii for t in self.t_abs]
+
+    @property
+    def schedule_length(self) -> int:
+        return max(self.t_abs) + 1
+
+    @property
+    def num_stages(self) -> int:
+        """Pipeline depth: number of interleaved iterations in steady state."""
+        return -(-self.schedule_length // self.ii)
+
+    def kernel_table(self) -> list[list[tuple[int, int]]]:
+        """Per kernel step: [(pe, node)] executing at that step."""
+        rows: list[list[tuple[int, int]]] = [[] for _ in range(self.ii)]
+        for v in self.dfg.nodes:
+            rows[self.labels[v]].append((self.placement[v], v))
+        for r in rows:
+            r.sort()
+        return rows
+
+    def validate(self, *, connectivity: str = "paper") -> list[str]:
+        errs = check_time_solution(
+            self.dfg, self.cgra, TimeSolution(self.ii, self.t_abs),
+            connectivity=connectivity,
+        )
+        errs += check_monomorphism(
+            self.dfg, self.cgra, self.labels, self.placement, self.ii
+        )
+        return errs
+
+    def pretty(self) -> str:
+        lines = [
+            f"mapping of {self.dfg.name!r} on {self.cgra.rows}x{self.cgra.cols} "
+            f"CGRA: II={self.ii}, schedule length={self.schedule_length}, "
+            f"stages={self.num_stages}"
+        ]
+        for step, row in enumerate(self.kernel_table()):
+            cells = " ".join(
+                f"PE{pe}<-n{v}(it{self.folds[v]})" for pe, v in row
+            )
+            lines.append(f"  t%II={step}: {cells}")
+        return "\n".join(lines)
+
+
+@dataclass
+class MapperStats:
+    time_phase_s: float = 0.0
+    space_phase_s: float = 0.0
+    total_s: float = 0.0
+    time_solutions_tried: int = 0
+    mono_failures: int = 0
+    final_ii: int = -1
+    m_ii: int = -1
+    res_ii: int = -1
+    rec_ii: int = -1
+    backend: str = ""
+
+
+@dataclass
+class MapResult:
+    mapping: Mapping | None
+    stats: MapperStats
+    reason: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.mapping is not None
+
+
+def map_dfg(
+    dfg: DFG,
+    cgra: CGRA,
+    *,
+    max_ii: int | None = None,
+    max_slack: int = 3,
+    connectivity: str = "strict",
+    backend: str = "auto",
+    time_budget_s: float = 120.0,
+    space_timeout_s: float = 0.6,
+    max_retries_per_window: int = 8,
+    window_timeout_s: float = 10.0,
+    max_register_pressure: int | None = None,
+) -> MapResult:
+    """Map `dfg` onto `cgra` with the decoupled pipeline.
+
+    ``max_register_pressure`` enables register-file-aware mapping — the
+    restriction the paper's §V-3 leaves to future work: mappings whose
+    steady-state per-PE live-value count exceeds the budget are rejected and
+    the search continues (blocking clause + retry), so accepted mappings are
+    guaranteed to fit the register files.
+    """
+    dfg.validate()
+    stats = MapperStats()
+    stats.res_ii = res_ii(dfg, cgra)
+    stats.rec_ii = rec_ii(dfg)
+    stats.m_ii = min_ii(dfg, cgra)
+    start = _time.perf_counter()
+    deadline = start + time_budget_s
+    hi = max_ii if max_ii is not None else max(stats.m_ii * 4, stats.m_ii + 8)
+
+    for ii in range(stats.m_ii, hi + 1):
+        for slack in range(0, max_slack + 1):
+            if _time.perf_counter() > deadline:
+                stats.total_s = _time.perf_counter() - start
+                return MapResult(None, stats, reason="time budget exhausted")
+            window_had_time_solution = False
+            try:
+                solver = TimeSolver(
+                    dfg, cgra, ii,
+                    extra_slack=slack,
+                    connectivity=connectivity,
+                    backend=backend,
+                    timeout_s=max(
+                        0.1, min(window_timeout_s, deadline - _time.perf_counter())
+                    ),
+                    seed=ii * 31 + slack,
+                )
+            except ValueError:
+                continue  # infeasible window (horizon < critical path)
+            stats.backend = solver.stats.backend
+            retries = 0
+            while retries < max_retries_per_window:
+                sol = solver.next_solution()
+                stats.time_phase_s = max(stats.time_phase_s, 0.0)
+                if sol is None:
+                    break
+                window_had_time_solution = True
+                stats.time_solutions_tried += 1
+                sstats = SpaceStats()
+                space = find_monomorphism(
+                    dfg, cgra, sol.labels, ii,
+                    timeout_s=space_timeout_s, stats=sstats,
+                    restarts=4, seed=retries,
+                )
+                stats.space_phase_s += sstats.search_time_s
+                if space is not None:
+                    mapping = Mapping(
+                        dfg=dfg, cgra=cgra, ii=ii,
+                        t_abs=sol.t_abs, placement=space.placement,
+                    )
+                    if max_register_pressure is not None:
+                        from .simulate import check_register_pressure
+
+                        pressure = check_register_pressure(mapping)
+                        if pressure > max_register_pressure:
+                            # paper §V-3 extension: reject and keep searching
+                            stats.mono_failures += 1
+                            retries += 1
+                            continue
+                    stats.time_phase_s += solver.stats.solver_time_s
+                    stats.final_ii = ii
+                    stats.total_s = _time.perf_counter() - start
+                    errs = mapping.validate()
+                    if errs:  # defensive: should be impossible
+                        raise AssertionError(
+                            f"mapper produced invalid mapping: {errs}"
+                        )
+                    return MapResult(mapping, stats)
+                stats.mono_failures += 1
+                retries += 1
+                if _time.perf_counter() > deadline:
+                    break
+            stats.time_phase_s += solver.stats.solver_time_s
+            if window_had_time_solution:
+                # Time solutions exist but none embedded: wider windows mostly
+                # re-enumerate equivalent partitions — escalate II instead
+                # (matches the paper's II-inflation behaviour on hard cases).
+                break
+    stats.total_s = _time.perf_counter() - start
+    return MapResult(None, stats, reason=f"no mapping up to II={hi}")

@@ -1,0 +1,232 @@
+"""Monomorphism-based space search (paper §IV-C).
+
+Given a time solution (kernel label per DFG node), find an injective,
+label-preserving, edge-preserving embedding of the undirected DFG into the
+MRRG. Under the register-file architecture (see core/cgra.py) an MRRG edge
+exists between (pe_u, t_u) and (pe_v, t_v) iff pe_u equals-or-neighbours pe_v,
+so the search reduces to placing each node on a PE such that
+
+  * at each kernel step, every PE hosts at most one node   (mono1 + mono2)
+  * G-adjacent nodes land on closed-adjacent PEs           (mono3)
+
+The search is a VF2/RI-style backtracking specialised to the label structure:
+connected expansion order (most-placed-neighbours first), candidate sets from
+the intersection of placed neighbours' closed neighbourhoods, forward checking
+(every placed node must retain enough free adjacent slots per step for its
+unplaced neighbours), and randomised restarts — the classic recipe that gives
+VF3-class robustness [29,30] while exploiting the time labels, which partition
+the injectivity constraint by step and keep the search shallow.
+"""
+
+from __future__ import annotations
+
+import random
+import time as _time
+from dataclasses import dataclass
+
+from .cgra import CGRA
+from .dfg import DFG
+
+
+@dataclass
+class SpaceSolution:
+    ii: int
+    placement: list[int]  # node -> PE index
+
+
+@dataclass
+class SpaceStats:
+    search_time_s: float = 0.0
+    nodes_visited: int = 0
+    backtracks: int = 0
+    restarts: int = 0
+
+
+def find_monomorphism(
+    dfg: DFG,
+    cgra: CGRA,
+    labels: list[int],
+    ii: int,
+    *,
+    timeout_s: float | None = 4.0,
+    restarts: int = 6,
+    seed: int = 0,
+    stats: SpaceStats | None = None,
+) -> SpaceSolution | None:
+    """Randomised-restart wrapper around one backtracking dive per seed."""
+    stats = stats if stats is not None else SpaceStats()
+    start = _time.perf_counter()
+    budget = timeout_s if timeout_s is not None else float("inf")
+    per_restart = budget / max(1, restarts)
+    for r in range(max(1, restarts)):
+        remaining = budget - (_time.perf_counter() - start)
+        if remaining <= 0:
+            break
+        stats.restarts += 1
+        sol = _search_once(
+            dfg, cgra, labels, ii,
+            deadline=_time.perf_counter() + min(per_restart, remaining),
+            rng=random.Random(seed * 7919 + r),
+            shuffle=r > 0,   # first dive is deterministic greedy
+            stats=stats,
+        )
+        if sol is not None:
+            stats.search_time_s += _time.perf_counter() - start
+            return SpaceSolution(ii=ii, placement=sol)
+    stats.search_time_s += _time.perf_counter() - start
+    return None
+
+
+def _search_once(
+    dfg: DFG,
+    cgra: CGRA,
+    labels: list[int],
+    ii: int,
+    *,
+    deadline: float,
+    rng: random.Random,
+    shuffle: bool,
+    stats: SpaceStats,
+) -> list[int] | None:
+    n = dfg.num_nodes
+    adj_g = dfg.undirected_adjacency()
+    neighbors = cgra.neighbors
+    num_pes = cgra.num_pes
+
+    if n > num_pes * ii:
+        return None
+    for v in range(n):
+        if not 0 <= labels[v] < ii:
+            raise ValueError(f"label out of range for node {v}: {labels[v]}")
+
+    closed: list[tuple[int, ...]] = [
+        tuple(sorted((p, *neighbors[p]))) for p in range(num_pes)
+    ]
+    degs = [len(adj_g[v]) for v in range(n)]
+
+    pe_order = sorted(range(num_pes), key=lambda p: -len(neighbors[p]))
+    if shuffle:
+        pe_order = list(pe_order)
+        rng.shuffle(pe_order)
+
+    placement = [-1] * n
+    occupied: list[set[int]] = [set() for _ in range(ii)]
+
+    # unplaced-neighbour step profile per node, updated incrementally
+    unplaced_by_step: list[dict[int, int]] = [dict() for _ in range(n)]
+    for v in range(n):
+        for u in adj_g[v]:
+            unplaced_by_step[v][labels[u]] = unplaced_by_step[v].get(labels[u], 0) + 1
+
+    def free_slots(p: int, step: int) -> int:
+        return sum(1 for q in closed[p] if q not in occupied[step])
+
+    def forward_ok(u: int) -> bool:
+        """Placed node u must keep enough free adjacent slots per step."""
+        pu = placement[u]
+        for step, need in unplaced_by_step[u].items():
+            if need and free_slots(pu, step) < need:
+                return False
+        return True
+
+    def candidates(v: int) -> list[int]:
+        placed_nbr_pes = [placement[u] for u in adj_g[v] if placement[u] >= 0]
+        if placed_nbr_pes:
+            base: set[int] | None = None
+            for pu in placed_nbr_pes:
+                s = set(closed[pu])
+                base = s if base is None else (base & s)
+                if not base:
+                    return []
+            cands = [p for p in base if p not in occupied[labels[v]]]
+            # interior-first keeps future intersections large; jitter on restarts
+            cands.sort(key=lambda p: (-len(neighbors[p]),
+                                      rng.random() if shuffle else p))
+            return cands
+        return [p for p in pe_order if p not in occupied[labels[v]]]
+
+    def place(v: int, p: int) -> None:
+        placement[v] = p
+        occupied[labels[v]].add(p)
+        for u in adj_g[v]:
+            unplaced_by_step[u][labels[v]] -= 1
+
+    def unplace(v: int, p: int) -> None:
+        for u in adj_g[v]:
+            unplaced_by_step[u][labels[v]] += 1
+        occupied[labels[v]].discard(p)
+        placement[v] = -1
+
+    def select_var() -> tuple[int, list[int]] | None:
+        """Dynamic MRV: among frontier nodes (>=1 placed neighbour), pick the
+        one with the fewest candidate PEs; empty frontier seeds a component."""
+        best_v, best_c = -1, None
+        for v in range(n):
+            if placement[v] >= 0:
+                continue
+            if not any(placement[u] >= 0 for u in adj_g[v]):
+                continue
+            c = candidates(v)
+            if not c:
+                return (v, [])          # dead end: fail fast
+            if best_c is None or (len(c), -degs[v]) < (len(best_c), -degs[best_v]):
+                best_v, best_c = v, c
+                if len(c) == 1:
+                    break
+        if best_v >= 0:
+            return best_v, best_c
+        # new component seed: highest-degree unplaced node
+        seeds = [v for v in range(n) if placement[v] < 0]
+        if not seeds:
+            return None
+        v = max(seeds, key=lambda u: (degs[u], rng.random() if shuffle else 0))
+        return v, candidates(v)
+
+    def rec(placed_count: int) -> bool:
+        if placed_count == n:
+            return True
+        if _time.perf_counter() > deadline:
+            return False
+        sel = select_var()
+        if sel is None:
+            return True
+        v, cands = sel
+        for p in cands:
+            stats.nodes_visited += 1
+            place(v, p)
+            if forward_ok(v) and all(
+                forward_ok(u) for u in adj_g[v] if placement[u] >= 0
+            ):
+                if rec(placed_count + 1):
+                    return True
+            stats.backtracks += 1
+            unplace(v, p)
+        return False
+
+    return list(placement) if rec(0) else None
+
+
+def check_monomorphism(
+    dfg: DFG, cgra: CGRA, labels: list[int], placement: list[int], ii: int
+) -> list[str]:
+    """Independent validator of mono1/mono2/mono3; returns violations."""
+    errs: list[str] = []
+    seen: dict[tuple[int, int], int] = {}
+    for v in dfg.nodes:
+        key = (placement[v], labels[v])
+        if key in seen:
+            errs.append(f"mono1: nodes {seen[key]} and {v} share MRRG vertex {key}")
+        seen[key] = v
+        if not 0 <= placement[v] < cgra.num_pes:
+            errs.append(f"node {v} placed out of range: {placement[v]}")
+    adj = dfg.undirected_adjacency()
+    for v in dfg.nodes:
+        for u in adj[v]:
+            if u < v:
+                continue
+            if not cgra.adjacency[placement[u]][placement[v]]:
+                errs.append(
+                    f"mono3: edge {{{u},{v}}} maps to non-adjacent PEs "
+                    f"{placement[u]},{placement[v]}"
+                )
+    return errs

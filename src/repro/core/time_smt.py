@@ -1,0 +1,358 @@
+"""Time-dimension SMT solver (paper §IV-B).
+
+Finds a modulo schedule (an absolute time ``t_v`` per DFG node, equivalently a
+kernel label ``l(v) = t_v mod II`` plus fold ``it_v = t_v div II``) satisfying
+three constraint families:
+
+1. *Modulo-scheduling constraints* — dependency ordering across foldings. We
+   encode the standard absolute-time form ``t_dst >= t_src + 1 - II*distance``,
+   which is exactly the paper's KMS case split (``t_d > t_s`` when
+   ``it_s == it_d``; ``t_d <= t_s`` when ``it_s - it_d == 1``) expressed without
+   the case analysis.
+2. *Capacity constraints* (paper's addition) — per kernel step i, the number of
+   nodes labelled i must not exceed the PE count.
+3. *Connectivity constraints* (paper's addition) — for every node v and step i,
+   the number of DFG-neighbours of v labelled i must not exceed the CGRA
+   connectivity degree D_M (closed neighbourhood size).
+
+``connectivity="paper"`` reproduces the constraint exactly as published.
+``connectivity="strict"`` additionally requires, for neighbours scheduled at
+*v's own* step, a bound of D_M - 1: same-step injectivity means v's own PE is
+not available to its same-step neighbours. The published proof overlooks this
+(see DESIGN.md §7 and tests/test_theorem.py, which exhibits the gap); "strict"
+closes the common case, and the mapper additionally retries with blocking
+clauses whenever a time solution admits no monomorphism, which makes the
+overall pipeline complete regardless of mode.
+
+Backends: Z3 (faithful to the paper, default when available) and a pure-Python
+backtracking CP solver (dependency-free cross-check).
+"""
+
+from __future__ import annotations
+
+import itertools
+import time as _time
+from dataclasses import dataclass, field
+
+from .cgra import CGRA
+from .dfg import DFG
+from .schedule import MobilitySchedule, asap_schedule, modulo_windows
+
+try:  # pragma: no cover - availability probed at import
+    import z3  # type: ignore
+
+    HAVE_Z3 = True
+except Exception:  # pragma: no cover
+    z3 = None
+    HAVE_Z3 = False
+
+
+@dataclass
+class TimeSolution:
+    """A valid time solution: absolute times + derived kernel labels."""
+
+    ii: int
+    t_abs: list[int]
+
+    @property
+    def labels(self) -> list[int]:
+        return [t % self.ii for t in self.t_abs]
+
+    @property
+    def folds(self) -> list[int]:
+        return [t // self.ii for t in self.t_abs]
+
+
+@dataclass
+class TimeSolverStats:
+    solver_time_s: float = 0.0
+    num_solutions_enumerated: int = 0
+    backend: str = ""
+    blocked: int = 0
+
+
+class TimeSolver:
+    """Enumerates time solutions for (dfg, cgra, II) lazily.
+
+    ``next_solution()`` returns a fresh TimeSolution each call (blocking the
+    previous one), or None when the space is exhausted — the mapper uses this
+    to recover from (rare) monomorphism failures.
+    """
+
+    def __init__(
+        self,
+        dfg: DFG,
+        cgra: CGRA,
+        ii: int,
+        *,
+        extra_slack: int = 0,
+        connectivity: str = "strict",
+        backend: str = "auto",
+        timeout_s: float | None = None,
+        seed: int = 0,
+    ) -> None:
+        if connectivity not in ("paper", "strict"):
+            raise ValueError(connectivity)
+        self.dfg = dfg
+        self.cgra = cgra
+        self.ii = ii
+        self.seed = seed
+        self.connectivity = connectivity
+        self.timeout_s = timeout_s
+        self.stats = TimeSolverStats()
+        horizon = max(asap_schedule(dfg), default=0) + extra_slack
+        windows = modulo_windows(dfg, ii, horizon)
+        if windows is None:
+            # infeasible window: expose an exhausted solver
+            raise ValueError(f"II={ii} infeasible within horizon {horizon}")
+        self.asap, self.alap = windows
+        # Analytic connectivity prechecks (save Z3 from exponential PB-UNSAT
+        # proofs on high-fanout DFGs):
+        #  (a) degree bound: deg(v) <= D_M*II - 1 (closed nbhd x steps - own slot)
+        #  (b) window-aware: neighbours can only occupy kernel steps their
+        #      [asap, alap] windows reach; per-step supply is capped at D_M
+        #      (D_M - 1 at v's own step when v's window is a singleton).
+        d_m = cgra.connectivity_degree
+        for v, nbrs in enumerate(dfg.undirected_adjacency()):
+            if not nbrs:
+                continue
+            if len(nbrs) > d_m * ii - 1:
+                raise ValueError(
+                    f"II={ii} infeasible: node {v} degree {len(nbrs)} > {d_m}*II-1"
+                )
+            cand = [0] * ii
+            for u in nbrs:
+                span = range(self.asap[u], min(self.alap[u], self.asap[u] + ii - 1) + 1)
+                for k in {t % ii for t in span}:
+                    cand[k] += 1
+            v_span = {t % ii for t in range(self.asap[v], min(self.alap[v], self.asap[v] + ii - 1) + 1)}
+            supply = sum(
+                min(cand[k], d_m - (1 if (len(v_span) == 1 and k in v_span) else 0))
+                for k in range(ii)
+            )
+            if supply < len(nbrs):
+                raise ValueError(
+                    f"II={ii} infeasible: node {v} neighbour supply {supply} < "
+                    f"{len(nbrs)}"
+                )
+        self.mobs = MobilitySchedule(tuple(self.asap), tuple(self.alap))
+        self.adj = dfg.undirected_adjacency()
+        if backend == "auto":
+            backend = "z3" if HAVE_Z3 else "python"
+        if backend == "z3" and not HAVE_Z3:
+            raise RuntimeError("z3 backend requested but z3 is not importable")
+        self.backend = backend
+        self.stats.backend = backend
+        if backend == "z3":
+            self._init_z3()
+        else:
+            self._py_iter = self._python_solutions()
+
+    # ------------------------------------------------------------------- z3
+    def _init_z3(self) -> None:
+        n = self.dfg.num_nodes
+        ii = self.ii
+        self._solver = z3.Solver()
+        if self.timeout_s is not None:
+            self._solver.set("timeout", int(self.timeout_s * 1000))
+        self._solver.set("random_seed", self.seed & 0xFFFF)
+        self._t = [z3.Int(f"t_{v}") for v in range(n)]
+        self._k = [z3.Int(f"k_{v}") for v in range(n)]
+        self._f = [z3.Int(f"f_{v}") for v in range(n)]
+        s = self._solver
+        max_fold = max(self.alap) // ii + 1 if n else 1
+        for v in range(n):
+            s.add(self._t[v] >= self.asap[v], self._t[v] <= self.alap[v])
+            # t = II*fold + k, 0 <= k < II  (linear decomposition; Z3 handles
+            # this far better than the `mod` operator on small grids)
+            s.add(self._t[v] == ii * self._f[v] + self._k[v])
+            s.add(self._k[v] >= 0, self._k[v] < ii)
+            s.add(self._f[v] >= 0, self._f[v] <= max_fold)
+        # 1. modulo-scheduling constraints
+        for e in self.dfg.edges:
+            s.add(self._t[e.dst] >= self._t[e.src] + 1 - ii * e.distance)
+        # 2. capacity constraints
+        cap = self.cgra.num_pes
+        for i in range(ii):
+            s.add(
+                z3.PbLe([(self._k[v] == i, 1) for v in range(n)], cap)
+            )
+        # 3. connectivity constraints
+        d_m = self.cgra.connectivity_degree
+        for v in range(n):
+            nbrs = sorted(self.adj[v])
+            if not nbrs:
+                continue
+            for i in range(ii):
+                s.add(
+                    z3.PbLe([(self._k[u] == i, 1) for u in nbrs], d_m)
+                )
+            if self.connectivity == "strict":
+                # same-step neighbours can only use the open neighbourhood
+                s.add(
+                    z3.PbLe(
+                        [(self._k[u] == self._k[v], 1) for u in nbrs], d_m - 1
+                    )
+                )
+        if self.connectivity == "strict":
+            # Mesh/torus PE graphs are bipartite => triangle-free, so three
+            # mutually-adjacent DFG nodes can never share a kernel step (they
+            # would need a triangle of distinct, mutually-adjacent PEs). The
+            # published constraints admit such partitions; excluding them here
+            # saves futile monomorphism searches (DESIGN.md §7).
+            for u, v, w in _triangles(self.adj):
+                s.add(z3.Or(self._k[u] != self._k[v], self._k[u] != self._k[w]))
+
+    def next_solution(self) -> TimeSolution | None:
+        start = _time.perf_counter()
+        try:
+            if self.backend == "z3":
+                res = self._solver.check()
+                if res != z3.sat:
+                    return None
+                model = self._solver.model()
+                t_abs = [model.eval(self._t[v]).as_long() for v in range(self.dfg.num_nodes)]
+                # Block the *label partition*, not just this t_abs: the space
+                # search depends only on labels, so any schedule with the same
+                # labels would fail the same way. This makes the mapper's
+                # retry-on-mono-failure loop converge quickly.
+                self._solver.add(
+                    z3.Or([self._k[v] != t_abs[v] % self.ii for v in range(self.dfg.num_nodes)])
+                )
+                if self.stats.blocked == 0:
+                    # Retry solves want *structurally* diverse label partitions
+                    # (the first solve wants fast default heuristics) — flip to
+                    # randomised phase selection once retries begin.
+                    try:
+                        self._solver.set("phase_selection", 5)
+                    except z3.Z3Exception:  # pragma: no cover
+                        pass
+                self.stats.blocked += 1
+                self.stats.num_solutions_enumerated += 1
+                return TimeSolution(self.ii, t_abs)
+            try:
+                t_abs = next(self._py_iter)
+            except StopIteration:
+                return None
+            self.stats.num_solutions_enumerated += 1
+            return TimeSolution(self.ii, list(t_abs))
+        finally:
+            self.stats.solver_time_s += _time.perf_counter() - start
+
+    # -------------------------------------------------------------- fallback
+    def _python_solutions(self):
+        """Backtracking CP enumeration (most-constrained-first ordering)."""
+        n = self.dfg.num_nodes
+        ii = self.ii
+        cap = self.cgra.num_pes
+        d_m = self.cgra.connectivity_degree
+        order = sorted(range(n), key=lambda v: (self.alap[v] - self.asap[v], -len(self.adj[v])))
+        t_abs = [-1] * n
+        count_per_step = [0] * ii
+        deadline = (
+            _time.perf_counter() + self.timeout_s if self.timeout_s else None
+        )
+
+        out_edges: list[list] = [[] for _ in range(n)]
+        in_edges: list[list] = [[] for _ in range(n)]
+        for e in self.dfg.edges:
+            out_edges[e.src].append(e)
+            in_edges[e.dst].append(e)
+        strict = self.connectivity == "strict"
+
+        def ok(v: int, t: int) -> bool:
+            k = t % ii
+            if count_per_step[k] + 1 > cap:
+                return False
+            for e in out_edges[v]:
+                if t_abs[e.dst] >= 0 and t_abs[e.dst] < t + 1 - ii * e.distance:
+                    return False
+            for e in in_edges[v]:
+                if t_abs[e.src] >= 0 and t < t_abs[e.src] + 1 - ii * e.distance:
+                    return False
+            # connectivity of v: placed neighbours of v, bucketed by step
+            per_step: dict[int, int] = {}
+            for u in self.adj[v]:
+                if t_abs[u] >= 0:
+                    su = t_abs[u] % ii
+                    per_step[su] = per_step.get(su, 0) + 1
+            if per_step.get(k, 0) > (d_m - 1 if strict else d_m):
+                return False
+            if any(c > d_m for c in per_step.values()):
+                return False
+            if strict:
+                # no mono-chromatic triangle (bipartite PE graph)
+                same = [u for u in self.adj[v] if t_abs[u] >= 0 and t_abs[u] % ii == k]
+                for a_i in range(len(same)):
+                    for b_i in range(a_i + 1, len(same)):
+                        if same[b_i] in self.adj[same[a_i]]:
+                            return False
+            # connectivity of each placed neighbour u: v adds one to u's step-k count
+            for u in self.adj[v]:
+                if t_abs[u] < 0:
+                    continue
+                cu = 1  # v itself
+                for w in self.adj[u]:
+                    if w != v and t_abs[w] >= 0 and t_abs[w] % ii == k:
+                        cu += 1
+                limit = d_m - 1 if strict and t_abs[u] % ii == k else d_m
+                if cu > limit:
+                    return False
+            return True
+
+        def rec(idx: int):
+            if deadline and _time.perf_counter() > deadline:
+                return
+            if idx == n:
+                yield tuple(t_abs)
+                return
+            v = order[idx]
+            for t in range(self.asap[v], self.alap[v] + 1):
+                if ok(v, t):
+                    t_abs[v] = t
+                    count_per_step[t % ii] += 1
+                    yield from rec(idx + 1)
+                    count_per_step[t % ii] -= 1
+                    t_abs[v] = -1
+
+        yield from rec(0)
+
+
+def _triangles(adj: list[set[int]]) -> list[tuple[int, int, int]]:
+    """All triangles {u<v<w} of an undirected adjacency-set list."""
+    out = []
+    for u in range(len(adj)):
+        for v in adj[u]:
+            if v <= u:
+                continue
+            for w in adj[u] & adj[v]:
+                if w > v:
+                    out.append((u, v, w))
+    return out
+
+
+def check_time_solution(
+    dfg: DFG, cgra: CGRA, sol: TimeSolution, *, connectivity: str = "paper"
+) -> list[str]:
+    """Independent validator; returns a list of violated-constraint messages."""
+    errs: list[str] = []
+    ii = sol.ii
+    labels = sol.labels
+    for e in dfg.edges:
+        if not sol.t_abs[e.dst] >= sol.t_abs[e.src] + 1 - ii * e.distance:
+            errs.append(f"dep {e} violated: t={sol.t_abs[e.src]},{sol.t_abs[e.dst]}")
+    for i in range(ii):
+        c = sum(1 for v in dfg.nodes if labels[v] == i)
+        if c > cgra.num_pes:
+            errs.append(f"capacity exceeded at step {i}: {c} > {cgra.num_pes}")
+    d_m = cgra.connectivity_degree
+    adj = dfg.undirected_adjacency()
+    for v in dfg.nodes:
+        for i in range(ii):
+            cnt = sum(1 for u in adj[v] if labels[u] == i)
+            limit = d_m
+            if connectivity == "strict" and i == labels[v]:
+                limit = d_m - 1
+            if cnt > limit:
+                errs.append(f"connectivity exceeded: node {v} step {i}: {cnt} > {limit}")
+    return errs

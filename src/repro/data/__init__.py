@@ -1,0 +1,3 @@
+from .pipeline import MemmapLM, SyntheticLM
+
+__all__ = ["MemmapLM", "SyntheticLM"]

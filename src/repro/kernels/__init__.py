@@ -1,0 +1,14 @@
+"""Pallas TPU kernels.
+
+cgra_sim.py          batched execution of mapped CGRA programs (the paper's
+                     compute substrate as a TPU kernel: crossbar -> one-hot
+                     MXU matmuls, register files -> VMEM ring buffer)
+flash_attention.py   fused attention (causal/sliding-window/softcap/GQA) —
+                     the TPU hot path behind the model zoo's blocked-attention
+                     jnp fallback
+
+ops.py               program compilation + jit'd wrappers
+ref.py               pure-jnp / numpy oracles (kernels assert against these)
+
+Validated with interpret=True on CPU; pass interpret=False on real TPUs.
+"""

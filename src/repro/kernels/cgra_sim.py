@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: batched functional execution of a mapped CGRA program.
+
+Executes the steady-state modulo schedule produced by the paper's mapper on a
+PE grid, vectorised over a batch of independent loop instances (the common
+CGRA deployment: the same accelerated loop applied to many data streams).
+
+Hardware adaptation (CGRA -> TPU), per DESIGN.md §3:
+
+  * the PE grid's crossbar/neighbour reads become **one-hot routing matmuls**
+    on the MXU: operand_a = route_a[k] @ ring_state — a gather expressed as a
+    dense matmul, the TPU-idiomatic form;
+  * the per-PE ALU opcode select becomes a **one-hot blend** on the VPU:
+    val = Σ_op sel[:, op] * op(a, b) — no data-dependent control flow;
+  * PE register files become a **ring buffer in VMEM scratch**, rolled one
+    slot per cycle so operand addresses are static per kernel step;
+  * the cycle loop is the sequential grid dimension; the batch is tiled to
+    128-lane blocks.
+
+VMEM working set: ring·pes·Bt (state) + 2·II·pes·ring·pes (routes) floats;
+callers size pes/ring accordingly (ops.py validates). The kernel is exact in
+f32: all ALU ops (incl. 16-bit-masked bitwise) produce f32-representable
+values, so assert-equal against the scalar oracle is legitimate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Fixed opcode ordering shared with core.simulate.OPCODES (asserted in ops.py).
+KERNEL_OPS = (
+    "input", "const", "load", "store", "add", "sub", "mul", "div",
+    "and", "or", "xor", "shl", "shr", "min", "max", "neg", "not",
+    "abs", "mov", "phi", "cmp",
+)
+NOPS = len(KERNEL_OPS)
+
+
+def _alu_all(a: jax.Array, b: jax.Array, imm: jax.Array, inj: jax.Array) -> jax.Array:
+    """All candidate op results, stacked [NOPS, pes, bt] (f32-exact)."""
+    ia = jnp.abs(a).astype(jnp.int32) & 0xFFFF
+    ib = jnp.abs(b).astype(jnp.int32) & 0xFFFF
+    sh = ib % 8
+    f = jnp.float32
+    outs = [
+        inj,                                        # input
+        jnp.broadcast_to(imm, a.shape),             # const
+        a,                                          # load
+        a,                                          # store
+        a + b,                                      # add
+        a - b,                                      # sub
+        a * b,                                      # mul
+        jnp.where(b != 0, a / jnp.where(b != 0, b, 1.0), 0.0),  # div (safe)
+        (ia & ib).astype(f),                        # and
+        (ia | ib).astype(f),                        # or
+        (ia ^ ib).astype(f),                        # xor
+        ((ia << sh) & 0xFFFF).astype(f),            # shl
+        (ia >> sh).astype(f),                       # shr
+        jnp.minimum(a, b),                          # min
+        jnp.maximum(a, b),                          # max
+        -a,                                         # neg
+        (~ia & 0xFFFF).astype(f),                   # not
+        jnp.abs(a),                                 # abs
+        a,                                          # mov
+        a + b,                                      # phi (carried accumulate)
+        (a > b).astype(f),                          # cmp
+    ]
+    return jnp.stack(outs)
+
+
+def _cgra_sim_kernel(
+    # inputs (blocked)
+    route_a_ref,   # [1, pes, ring*pes]   routing one-hot for step k=c%II (op a)
+    route_b_ref,   # [1, pes, ring*pes]
+    op_sel_ref,    # [1, pes, NOPS]       opcode one-hot for step k
+    imm_ref,       # [1, pes]             immediates for step k
+    inj_ref,       # [1, pes, bt]         input-node injections for cycle c
+    active_ref,    # [1, pes]             1.0 where a node fires at cycle c
+    # outputs
+    trace_ref,     # [1, pes, bt]         value produced at (c, pe)
+    # scratch
+    ring_ref,      # [ring, pes, bt]      register-file ring buffer
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        ring_ref[...] = jnp.zeros_like(ring_ref)
+
+    ring, pes, bt = ring_ref.shape
+    state = ring_ref[...].reshape(ring * pes, bt)
+
+    # crossbar: one-hot routing matmuls (MXU)
+    a = jnp.dot(route_a_ref[0], state, preferred_element_type=jnp.float32)
+    b = jnp.dot(route_b_ref[0], state, preferred_element_type=jnp.float32)
+
+    imm = imm_ref[0][:, None]
+    inj = inj_ref[0]
+    candidates = _alu_all(a, b, imm, inj)          # [NOPS, pes, bt]
+    sel = op_sel_ref[0]                            # [pes, NOPS]
+    val = jnp.einsum("opb,po->pb", candidates, sel)
+    val = val * active_ref[0][:, None]
+
+    # roll the register ring by one cycle; newest value enters slot 0
+    if ring > 1:  # static: ring==1 means every operand is consumed next cycle
+        shifted = ring_ref[: ring - 1]
+        ring_ref[1:] = shifted
+    ring_ref[0] = val
+    trace_ref[0] = val
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ii", "ring", "num_cycles", "batch_tile", "interpret"),
+)
+def cgra_sim_pallas(
+    route_a: jax.Array,   # [II, pes, ring*pes] f32 one-hot
+    route_b: jax.Array,
+    op_sel: jax.Array,    # [II, pes, NOPS] f32 one-hot
+    imm: jax.Array,       # [II, pes] f32
+    inj: jax.Array,       # [C, pes, B] f32
+    active: jax.Array,    # [C, pes] f32
+    *,
+    ii: int,
+    ring: int,
+    num_cycles: int,
+    batch_tile: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Run the program; returns the full trace [C, pes, B]."""
+    pes = route_a.shape[1]
+    batch = inj.shape[2]
+    bt = min(batch_tile, batch)
+    if batch % bt:
+        raise ValueError(f"batch {batch} not divisible by tile {bt}")
+    nb = batch // bt
+
+    grid = (nb, num_cycles)  # batch tiles outer, cycles inner (sequential)
+    return pl.pallas_call(
+        _cgra_sim_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, pes, ring * pes), lambda b, c: (c % ii, 0, 0)),
+            pl.BlockSpec((1, pes, ring * pes), lambda b, c: (c % ii, 0, 0)),
+            pl.BlockSpec((1, pes, NOPS), lambda b, c: (c % ii, 0, 0)),
+            pl.BlockSpec((1, pes), lambda b, c: (c % ii, 0)),
+            pl.BlockSpec((1, pes, bt), lambda b, c: (c, 0, b)),
+            pl.BlockSpec((1, pes), lambda b, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, pes, bt), lambda b, c: (c, 0, b)),
+        out_shape=jax.ShapeDtypeStruct((num_cycles, pes, batch), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((ring, pes, bt), jnp.float32)],
+        interpret=interpret,
+    )(route_a, route_b, op_sel, imm, inj, active)

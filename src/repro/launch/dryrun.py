@@ -1,0 +1,400 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init), which is why they sit above the module docstring.
+
+Per cell:
+  * build the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  * build the model + sharding rules,
+  * jax.jit(step).lower(**ShapeDtypeStructs).compile()   (no allocation),
+  * print + persist memory_analysis() / cost_analysis() / roofline terms.
+
+Run one cell:   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --multi-pod
+Run everything: PYTHONPATH=src python -m repro.launch.dryrun --all [--results DIR]
+(--all orchestrates one subprocess per cell — isolation keeps XLA memory
+bounded and makes the sweep resumable; finished cells are skipped.)
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def _depth_variants(cfg):
+    """Shallow-depth configs + extrapolation weights for linear cost fitting.
+
+    Returns (variants, weights): cost_full = sum_i w_i * cost(variants[i]).
+    Exact for homogeneous layer stacks: cost(L) = outside + L * body.
+    """
+    import dataclasses
+
+    L = cfg.num_layers
+    if cfg.moe is not None:
+        nd, nm = cfg.num_dense_layers, L - cfg.num_dense_layers
+        v11 = dataclasses.replace(cfg, num_layers=2, num_dense_layers=1)
+        v21 = dataclasses.replace(cfg, num_layers=3, num_dense_layers=2)
+        v12 = dataclasses.replace(cfg, num_layers=3, num_dense_layers=1)
+        # f = f11 + (nd-1)(f21-f11) + (nm-1)(f12-f11)
+        w = [1.0 - (nd - 1) - (nm - 1), float(nd - 1), float(nm - 1)]
+        return [v11, v21, v12], w
+    if cfg.family == "ssm":            # alternating pairs
+        v2 = dataclasses.replace(cfg, num_layers=2)
+        v4 = dataclasses.replace(cfg, num_layers=4)
+        k = (L - 2) / 2
+        return [v2, v4], [1.0 - k, k]
+    v1 = dataclasses.replace(cfg, num_layers=1)
+    v2 = dataclasses.replace(cfg, num_layers=2)
+    return [v1, v2], [1.0 - (L - 1), float(L - 1)]
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, results_dir: str,
+             opt_flags: dict | None = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.launch.mesh import data_axes_of, make_production_mesh
+    from repro.models import build_model
+    from repro.models.zoo import train_input_specs
+    from repro.optim import AdamWConfig, adamw_init, adamw_update, build_opt_shardings
+    from repro.roofline.analysis import (
+        HW, analyze_compiled, model_flops_decode, model_flops_train,
+    )
+    from repro.sharding import batch_shardings, cache_shardings, param_shardings
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.roofline.analysis import HW, Roofline, parse_collectives
+
+    base_cfg = get_config(arch)
+    opt_flags = opt_flags or {}
+    shape = next(s for s in base_cfg.shapes() if s.name == shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data_axes = data_axes_of(mesh)
+    chips = mesh.devices.size
+    timings: dict[str, float] = {}
+
+    if opt_flags.get("batch_over_model") in (True, "1", "true"):
+        # pure-DP experiment: the 'model' axis joins the batch axes
+        data_axes = (*data_axes, "model")
+
+    # FSDP decision from the FULL config (shallow cost variants must use the
+    # same layout so extrapolated collectives include FSDP all-gathers)
+    _full_spec = build_model(base_cfg, mesh=mesh, data_axes=data_axes)
+    _full_params = jax.eval_shape(_full_spec.init, jax.random.PRNGKey(0))
+    _probe = param_shardings(_full_params, mesh)
+    use_fsdp = any(
+        any(ax is not None and ax != "model"
+            for s in (leaf.spec,) for ax in s)
+        for leaf in jax.tree.leaves(_probe)
+    )
+    print(f"fsdp={use_fsdp}")
+
+    # ---- §Perf experiment knobs (set via --set key=val)
+    replicate_patterns = tuple(
+        opt_flags.get("replicate_patterns", "").split(",")
+    ) if opt_flags.get("replicate_patterns") else ()
+
+    def tweak_cfg(cfg_x):
+        if opt_flags.get("moe_capacity"):
+            cfg_x = dataclasses.replace(
+                cfg_x,
+                moe=dataclasses.replace(
+                    cfg_x.moe, capacity_factor=float(opt_flags["moe_capacity"])
+                ),
+            )
+        if opt_flags.get("remat") is not None:
+            cfg_x = dataclasses.replace(cfg_x, remat=opt_flags["remat"] in (True, "1", "true"))
+        if opt_flags.get("act_constraints") is not None:
+            cfg_x = dataclasses.replace(
+                cfg_x,
+                activation_constraints=opt_flags["act_constraints"] in (True, "1", "true"),
+            )
+        if opt_flags.get("ep_all") in (True, "1", "true"):
+            cfg_x = dataclasses.replace(cfg_x, ep_over_data=True)
+        return cfg_x
+
+    def lower_step(cfg_x, *, unroll: bool):
+        """Lower the cell's step for a (possibly depth-reduced) config."""
+        cfg_b = dataclasses.replace(cfg_x, scan_layers=False) if unroll else cfg_x
+        cfg_b = tweak_cfg(cfg_b)
+        spec = build_model(cfg_b, mesh=mesh, data_axes=data_axes)
+        params_shape = jax.eval_shape(spec.init, jax.random.PRNGKey(0))
+        fsdp = use_fsdp if opt_flags.get("fsdp") is None else opt_flags["fsdp"] in (True, "1", "true")
+        ep_axes = (
+            (*data_axes, "model")
+            if opt_flags.get("ep_all") in (True, "1", "true")
+            else None
+        )
+        p_sh = param_shardings(
+            params_shape, mesh, force_fsdp=fsdp,
+            replicate_patterns=replicate_patterns,
+            expert_axes=ep_axes,
+        )
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(
+                moment_dtype=jnp.bfloat16 if "671b" in arch else jnp.float32
+            )
+            opt_shape = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_shape)
+            o_sh = build_opt_shardings(params_shape, p_sh, mesh, data_axis="data")
+            batch = train_input_specs(cfg_b, shape)
+            b_sh = batch_shardings(batch, mesh, data_axes)
+            compress = opt_flags.get("compress_grads") in (True, "1", "true")
+
+            def train_step(params, opt, batch):
+                (loss, metrics), grads = jax.value_and_grad(
+                    spec.loss_fn, has_aux=True
+                )(params, batch)
+                if compress:
+                    # int8 the gradient payload before the DP reduction
+                    # (error feedback runs in the real train loop; the dry-run
+                    # measures the wire-size effect)
+                    from repro.optim.compression import compress as _c, decompress as _d
+
+                    grads = jax.tree.map(
+                        lambda g: _d(*_c(g), g.shape).astype(g.dtype), grads
+                    )
+                new_params, new_opt, om = adamw_update(grads, opt, params, opt_cfg)
+                return new_params, new_opt, {"loss": loss, **metrics, **om}
+
+            return jax.jit(
+                train_step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(params_shape, opt_shape, batch)
+
+        if shape.kind == "prefill":
+            batch = train_input_specs(cfg_b, shape)
+            batch.pop("labels")
+            b_sh = batch_shardings(batch, mesh, data_axes)
+
+            def prefill_step(params, batch):
+                if cfg_b.family == "audio":
+                    logits, _ = spec.prefill(params, batch, shape.seq_len)
+                else:
+                    logits, _ = spec.prefill(params, batch["tokens"], shape.seq_len)
+                return logits
+
+            return jax.jit(prefill_step, in_shardings=(p_sh, b_sh)).lower(
+                params_shape, batch
+            )
+
+        caches_shape = jax.eval_shape(
+            lambda: spec.make_caches(None, shape.global_batch, shape.seq_len)
+        )
+        c_sh = cache_shardings(caches_shape, mesh, data_axes)
+        token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        tok_sh = batch_shardings(token, mesh, data_axes)
+        pos_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+        def serve_step(params, token, caches, pos):
+            return spec.decode_step(params, token, caches, pos)
+
+        return jax.jit(
+            serve_step,
+            in_shardings=(p_sh, tok_sh, c_sh, pos_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(2,),
+        ).lower(params_shape, token, caches_shape, pos)
+
+    def costs_of(compiled):
+        cost = compiled.cost_analysis()
+        coll = parse_collectives(compiled.as_text())
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": dict(coll.bytes_by_kind),
+            "counts": dict(coll.count_by_kind),
+        }
+
+    # ---- memory build: the deployment artifact (scan where the arch scans)
+    t0 = time.time()
+    mem_lowered = lower_step(base_cfg, unroll=False)
+    timings["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    mem_compiled = mem_lowered.compile()
+    timings["compile_s"] = round(time.time() - t0, 1)
+    mem = mem_compiled.memory_analysis()
+    print(mem)
+
+    # ---- cost terms: exact totals.
+    # Scanned archs under-report in cost_analysis (While bodies count once),
+    # so their FLOPs/collective bytes come from shallow *unrolled* depth
+    # variants extrapolated linearly (exact for homogeneous stacks).
+    if base_cfg.scan_layers and not opt_flags.get("no_extrapolate"):
+        t0 = time.time()
+        variants, weights = _depth_variants(base_cfg)
+        per_variant = []
+        for v in variants:
+            per_variant.append(costs_of(lower_step(v, unroll=True).compile()))
+        timings["variant_compile_s"] = round(time.time() - t0, 1)
+
+        def combine(key):
+            if key in ("coll", "counts"):
+                kinds = {k for pv in per_variant for k in pv[key]}
+                return {
+                    k: max(0.0, sum(w * pv[key].get(k, 0) for w, pv in zip(weights, per_variant)))
+                    for k in kinds
+                }
+            return max(0.0, sum(w * pv[key] for w, pv in zip(weights, per_variant)))
+
+        flops = combine("flops")
+        hbm_bytes = combine("bytes")
+        coll_by_kind = combine("coll")
+        coll_counts = {k: int(v) for k, v in combine("counts").items()}
+        cost_method = f"depth-extrapolated({len(variants)} variants)"
+    else:
+        c = costs_of(mem_compiled)
+        flops, hbm_bytes = c["flops"], c["bytes"]
+        coll_by_kind, coll_counts = c["coll"], c["counts"]
+        cost_method = "direct (unrolled model)"
+
+    if shape.kind == "train":
+        model_flops = model_flops_train(base_cfg, shape)
+    elif shape.kind == "prefill":
+        model_flops = model_flops_train(base_cfg, shape) / 3.0  # fwd only
+    else:
+        model_flops = model_flops_decode(base_cfg, shape)
+
+    hw = HW()
+    coll_total = float(sum(coll_by_kind.values()))
+    t_compute = flops / hw.peak_flops
+    t_memory = hbm_bytes / hw.hbm_bw
+    t_collective = coll_total / hw.ici_bw
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    bound = max(terms.values())
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "ok": True,
+        **timings,
+        "cost_method": cost_method,
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": hbm_bytes,
+        "collective_bytes_per_dev": coll_total,
+        "collectives": coll_by_kind,
+        "collective_counts": coll_counts,
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_collective,
+        "bottleneck": bottleneck,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / (flops * chips) if flops else 0.0,
+        "mfu_upper_bound": (
+            model_flops / (chips * hw.peak_flops * bound) if bound else 0.0
+        ),
+        "arg_bytes_per_dev": getattr(mem, "argument_size_in_bytes", 0),
+        "temp_bytes_per_dev": getattr(mem, "temp_size_in_bytes", 0),
+        "out_bytes_per_dev": getattr(mem, "output_size_in_bytes", 0),
+    }
+    _persist(results_dir, result)
+    print(json.dumps(result, indent=2))
+    return result
+
+
+def _cell_id(arch, shape, multi_pod):
+    return f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
+
+
+def _persist(results_dir, result):
+    os.makedirs(results_dir, exist_ok=True)
+    cid = _cell_id(result["arch"], result["shape"], result["mesh"] == "2x16x16")
+    with open(os.path.join(results_dir, cid + ".json"), "w") as f:
+        json.dump(result, f, indent=2)
+
+
+def run_all(results_dir: str, *, timeout_s: int = 1800, only_arch: str | None = None):
+    """Subprocess-per-cell sweep (resumable; finished cells skipped)."""
+    import subprocess
+
+    from repro.configs import all_configs
+
+    cells = []
+    for arch, cfg in all_configs().items():
+        if only_arch and arch != only_arch:
+            continue
+        for shape in cfg.shapes():
+            for multi in (False, True):
+                cells.append((arch, shape.name, multi))
+    print(f"{len(cells)} cells")
+    failures = []
+    for arch, shape, multi in cells:
+        cid = _cell_id(arch, shape, multi)
+        out = os.path.join(results_dir, cid + ".json")
+        if os.path.exists(out):
+            print(f"skip (done): {cid}")
+            continue
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--results", results_dir,
+        ] + (["--multi-pod"] if multi else [])
+        print(f"=== {cid}")
+        t0 = time.time()
+        try:
+            proc = subprocess.run(
+                cmd, timeout=timeout_s, capture_output=True, text=True,
+                env={**os.environ, "PYTHONPATH": "src"},
+            )
+            if proc.returncode != 0:
+                failures.append(cid)
+                err = {
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if multi else "16x16",
+                    "ok": False, "error": proc.stderr[-4000:],
+                }
+                with open(out, "w") as f:
+                    json.dump(err, f, indent=2)
+                print(f"FAILED ({time.time()-t0:.0f}s): see {out}")
+            else:
+                print(f"ok ({time.time()-t0:.0f}s)")
+        except subprocess.TimeoutExpired:
+            failures.append(cid)
+            with open(out, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "ok": False,
+                           "error": f"timeout {timeout_s}s"}, f)
+            print("TIMEOUT")
+    print(f"done; {len(failures)} failures: {failures}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--only-arch")
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--set", action="append", default=[],
+                    help="experiment knob key=val (e.g. --set moe_capacity=1.0)")
+    args = ap.parse_args()
+    opt_flags = dict(kv.split("=", 1) for kv in args.set)
+    if args.all:
+        fails = run_all(args.results, timeout_s=args.timeout, only_arch=args.only_arch)
+        sys.exit(1 if fails else 0)
+    try:
+        run_cell(args.arch, args.shape, args.multi_pod, args.results,
+                 opt_flags=opt_flags)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. Single-pod: 16x16 = 256 chips ("data", "model").
+Multi-pod: 2x16x16 = 512 chips ("pod", "data", "model") — the pod axis is the
+cross-DCI data-parallel axis (gradient all-reduce hierarchically: reduce
+within pod over ICI, then across pods; gradient compression applies there).
+
+The device order for the model axis can be permuted with the paper's own
+placement machinery (core/placement.py) so pipeline/EP neighbours sit on
+ICI-adjacent chips — see examples/pipeline_placement.py.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU tests (requires host-device override in the test)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

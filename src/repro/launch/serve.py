@@ -1,0 +1,89 @@
+"""Batched serving driver: prefill + decode loop with KV/state caches.
+
+Continuous-batching-lite: a request queue is drained in fixed-size batches;
+each batch is prefilled in parallel and decoded token-by-token with the
+family's cache (KV / compressed-MLA / recurrent state). Runs any --arch,
+full or --reduced.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --requests 16 --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def serve_batch(spec, params, prompts: np.ndarray, gen: int, cache_len: int):
+    cfg = spec.cfg
+    b, s = prompts.shape
+    if cfg.family == "audio":
+        batch = {
+            "frames": jnp.zeros((b, cfg.frontend_len, cfg.d_model), jnp.float32),
+            "tokens": jnp.asarray(prompts),
+        }
+        logits, caches = spec.prefill(params, batch, cache_len)
+    else:
+        logits, caches = spec.prefill(params, jnp.asarray(prompts), cache_len)
+    tok = jnp.argmax(logits, -1)[:, None]
+    out = [np.asarray(tok)]
+    decode = jax.jit(spec.decode_step)
+    base = s + cfg.num_meta_tokens + (cfg.frontend_len if cfg.family == "vlm" else 0)
+    for i in range(gen - 1):
+        logits, caches = decode(params, tok, caches, jnp.int32(base + i))
+        tok = jnp.argmax(logits, -1)[:, None]
+        out.append(np.asarray(tok))
+    return np.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    spec = build_model(cfg)
+    params = spec.init(jax.random.PRNGKey(args.seed))
+
+    rng = np.random.default_rng(args.seed)
+    queue = [
+        rng.integers(1, cfg.vocab, size=args.prompt_len).astype(np.int32)
+        for _ in range(args.requests)
+    ]
+    cache_len = args.prompt_len + args.gen + 8
+
+    t0 = time.perf_counter()
+    done = 0
+    while queue:
+        batch = queue[: args.batch]
+        queue = queue[args.batch :]
+        prompts = np.stack(
+            batch + [batch[-1]] * (args.batch - len(batch))
+        )  # pad the tail batch
+        tokens = serve_batch(spec, params, prompts, args.gen, cache_len)
+        done += len(batch)
+        print(f"batch done: {len(batch)} reqs, sample continuation {tokens[0][:8]}")
+    dt = time.perf_counter() - t0
+    total_tokens = done * args.gen
+    print(f"served {done} requests / {total_tokens} tokens in {dt:.1f}s "
+          f"({total_tokens/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Model zoo for the 10 assigned architectures."""
+
+from .api import ArchConfig, MLASpec, MoESpec, ModelSpec, ShapeSpec, SSMSpec
+from .zoo import build_model, param_count, train_input_specs
+
+__all__ = [
+    "ArchConfig", "MLASpec", "MoESpec", "ModelSpec", "ShapeSpec", "SSMSpec",
+    "build_model", "param_count", "train_input_specs",
+]

@@ -1,0 +1,285 @@
+"""Attention variants for the model zoo: GQA (+qk-norm, sliding window,
+softcap) and Multi-head Latent Attention (DeepSeek-V2/V3 MLA).
+
+All functions are pure; caches are explicit (carried through serve steps).
+The dense jnp path is the default (portable + SPMD-partitionable by XLA);
+kernels/flash_attention.py is the TPU hot-path drop-in for train/prefill
+(selected via cfg.use_flash_kernel on real hardware).
+
+Cache layouts (decode):
+  GQA: k,v [batch, kv_heads, cache_len, head_dim]   (cache_len shardable)
+  MLA: c_kv [batch, cache_len, kv_lora + rope_dim]  (compressed, per paper)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_param, rms_norm, rope, softcap
+
+
+class KVCache(NamedTuple):
+    k: jax.Array
+    v: jax.Array
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array   # [batch, cache, kv_lora + rope_dim]
+
+
+# --------------------------------------------------------------------- GQA
+
+def gqa_init(rng, cfg, layer_dtype) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 6)
+    p = {
+        "w_q": dense_param(ks[0], d, hq * hd, layer_dtype),
+        "w_k": dense_param(ks[1], d, hkv * hd, layer_dtype),
+        "w_v": dense_param(ks[2], d, hkv * hd, layer_dtype),
+        "w_o": dense_param(ks[3], hq * hd, d, layer_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), layer_dtype)
+        p["k_norm"] = jnp.zeros((hd,), layer_dtype)
+    return p
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window, prefix_len=None) -> jax.Array:
+    """Additive mask [q, k] in f32; `window` may be a traced scalar (<=0 means
+    no window) so alternating local/global layers can share one scanned body.
+    `prefix_len` enables prefix-LM masking (bidirectional within the prefix —
+    paligemma's image+prompt region)."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        w = jnp.asarray(window)
+        in_window = (q_pos[:, None] - k_pos[None, :]) < w
+        ok &= in_window | (w <= 0)
+    if prefix_len is not None:
+        both_prefix = (q_pos[:, None] < prefix_len) & (k_pos[None, :] < prefix_len)
+        ok |= both_prefix
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+_BLOCKED_ATTN_THRESHOLD = 16 * 2**20   # s_q * s_k above which we block
+_Q_BLOCK = 512
+
+
+def _blocked_scores_attention(
+    qg, k, v, q_pos, k_pos, *, scale, attn_softcap, causal, window, prefix_len,
+    valid,
+):
+    """Flash-pattern attention in pure jnp: scan over query blocks so only
+    [q_block, s_k] scores materialise (XLA/SPMD-friendly; the Pallas kernel
+    kernels/flash_attention.py is the TPU drop-in). qg: [b, hkv, g, s, d]."""
+    b, hkv, g, s, d = qg.shape
+    qb = _Q_BLOCK
+    pad = (-s) % qb
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=q_pos[-1])
+    nb = qg.shape[3] // qb
+    qg = qg.reshape(b, hkv, g, nb, qb, d)
+    q_pos_b = q_pos.reshape(nb, qb)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def body(_, inputs):
+        q_blk, qp = inputs                       # [b,hkv,g,qb,d], [qb]
+        s_blk = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk.astype(jnp.float32), kf)
+        s_blk = s_blk * scale
+        s_blk = softcap(s_blk, attn_softcap)
+        bias = _mask_bias(qp, k_pos, causal=causal, window=window,
+                          prefix_len=prefix_len)
+        if valid is not None:
+            bias = bias + jnp.where(valid, 0.0, -1e30)[None, :]
+        p = jax.nn.softmax(s_blk + bias, axis=-1)
+        return None, jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+
+    xs = (qg.transpose(3, 0, 1, 2, 4, 5), q_pos_b)
+    _, out = jax.lax.scan(jax.checkpoint(body), None, xs)
+    dv = v.shape[-1]  # may differ from the qk head dim (MLA)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, nb * qb, dv)
+    return out[:, :, :, :s]
+
+
+def gqa_attention(
+    params: dict,
+    x: jax.Array,                  # [batch, seq, d_model]
+    positions: jax.Array,          # [seq] (absolute)
+    cfg,
+    *,
+    causal: bool = True,
+    window=None,                   # None | int | traced scalar (<=0 => global)
+    prefix_len=None,               # prefix-LM bidirectional region
+    cache: KVCache | None = None,  # decode: append & attend over cache
+    cross_kv: tuple | None = None, # encoder K/V for cross-attention
+) -> tuple[jax.Array, KVCache | None]:
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["w_q"]).reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    if cross_kv is None:
+        k = (x @ params["w_k"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+        v = (x @ params["w_v"]).reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    else:
+        k, v = cross_kv
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        if cross_kv is None:
+            k = rms_norm(k, params["k_norm"])
+    if cfg.use_rope and cross_kv is None:
+        q = rope(q, positions[None, None, :], theta=cfg.rope_theta)
+        k = rope(k, positions[None, None, :], theta=cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and cross_kv is None:
+        # decode (s=1) or prefill (s=seq): write k/v block at positions[0]
+        idx = positions[0]
+        k_full = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, idx, 0))
+        v_full = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, idx, 0))
+        new_cache = KVCache(k_full, v_full)
+        k, v = k_full, v_full
+        k_pos = jnp.arange(k.shape[2])
+        valid = k_pos <= positions[-1]
+    else:
+        k_pos = positions if cross_kv is None else jnp.arange(k.shape[2])
+        valid = None
+
+    group = hq // k.shape[1]
+    qg = q.reshape(b, k.shape[1], group, s, hd)
+    scale = cfg.head_dim**-0.5 if cfg.attn_scale is None else cfg.attn_scale
+    eff_causal = causal and cross_kv is None
+    eff_window = window if cross_kv is None else None
+    eff_prefix = prefix_len if cross_kv is None else None
+    if s * k.shape[2] >= _BLOCKED_ATTN_THRESHOLD and s > 1:
+        out = _blocked_scores_attention(
+            qg, k, v, positions, k_pos,
+            scale=scale, attn_softcap=cfg.attn_softcap,
+            causal=eff_causal, window=eff_window, prefix_len=eff_prefix,
+            valid=valid,
+        )
+    else:
+        scores = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale
+        scores = softcap(scores, cfg.attn_softcap)
+        bias = _mask_bias(positions, k_pos, causal=eff_causal,
+                          window=eff_window, prefix_len=eff_prefix)
+        if valid is not None:
+            bias = bias + jnp.where(valid, 0.0, -1e30)[None, :]
+        scores = scores + bias
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, hq, s, hd).transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return (out.astype(x.dtype) @ params["w_o"]), new_cache
+
+
+def make_kv_cache(cfg, batch: int, cache_len: int, dtype) -> KVCache:
+    shape = (batch, cfg.num_kv_heads, cache_len, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+# --------------------------------------------------------------------- MLA
+
+def mla_init(rng, cfg, dtype) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    m = cfg.mla
+    ks = jax.random.split(rng, 8)
+    qk_head = m.qk_nope_dim + m.rope_dim
+    p = {
+        # query path (low-rank)
+        "w_dq": dense_param(ks[0], d, m.q_lora, dtype),
+        "q_norm": jnp.zeros((m.q_lora,), dtype),
+        "w_uq": dense_param(ks[1], m.q_lora, h * qk_head, dtype),
+        # kv path (compressed latent + decoupled rope key)
+        "w_dkv": dense_param(ks[2], d, m.kv_lora + m.rope_dim, dtype),
+        "kv_norm": jnp.zeros((m.kv_lora,), dtype),
+        "w_uk": dense_param(ks[3], m.kv_lora, h * m.qk_nope_dim, dtype),
+        "w_uv": dense_param(ks[4], m.kv_lora, h * m.v_dim, dtype),
+        "w_o": dense_param(ks[5], h * m.v_dim, d, dtype),
+    }
+    return p
+
+
+def mla_attention(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg,
+    *,
+    cache: MLACache | None = None,
+) -> tuple[jax.Array, MLACache | None]:
+    """DeepSeek MLA: queries/keys split into a latent 'nope' part and a shared
+    rope part; only the compressed latent + rope key is cached (576/token for
+    V3) — the property that makes long-context decode caches small."""
+    b, s, d = x.shape
+    h, m = cfg.num_heads, cfg.mla
+
+    cq = rms_norm(x @ params["w_dq"], params["q_norm"])
+    q = (cq @ params["w_uq"]).reshape(b, s, h, m.qk_nope_dim + m.rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = rope(
+        q_rope.transpose(0, 2, 1, 3), positions[None, None, :], theta=cfg.rope_theta
+    ).transpose(0, 2, 1, 3)
+
+    ckv_full = x @ params["w_dkv"]                     # [b, s, kv_lora+rope]
+    c_kv, k_rope = ckv_full[..., : m.kv_lora], ckv_full[..., m.kv_lora :]
+    k_rope = rope(k_rope[:, None], positions[None, None, :], theta=cfg.rope_theta)[
+        :, 0
+    ]                                                   # [b, s, rope] shared
+
+    new_cache = None
+    if cache is not None:
+        idx = positions[0]
+        packed = jnp.concatenate([c_kv, k_rope], axis=-1)
+        full = jax.lax.dynamic_update_slice(cache.c_kv, packed, (0, idx, 0))
+        new_cache = MLACache(full)
+        c_kv, k_rope = full[..., : m.kv_lora], full[..., m.kv_lora :]
+        k_pos = jnp.arange(c_kv.shape[1])
+        valid = k_pos <= positions[-1]
+    else:
+        k_pos = positions
+        valid = None
+
+    c_kv = rms_norm(c_kv, params["kv_norm"])
+    t = c_kv.shape[1]
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, t, h, m.qk_nope_dim)
+    v = (c_kv @ params["w_uv"]).reshape(b, t, h, m.v_dim)
+
+    scale = (m.qk_nope_dim + m.rope_dim) ** -0.5
+    if s * t >= _BLOCKED_ATTN_THRESHOLD and s > 1:
+        # fold the shared rope key into the head dim and reuse the blocked path
+        q_cat = jnp.concatenate([q_nope, q_rope], -1)          # [b,s,h,dk]
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, t, h, m.rope_dim))],
+            -1,
+        )
+        qg = q_cat.transpose(0, 2, 1, 3)[:, :, None]           # [b,h,1,s,dk]
+        out = _blocked_scores_attention(
+            qg, k_cat.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            positions, k_pos,
+            scale=scale, attn_softcap=None, causal=True, window=None,
+            prefix_len=None, valid=valid,
+        )                                                       # [b,h,1,s,vd]
+        out = out[:, :, 0].transpose(0, 2, 1, 3)                # [b,s,h,vd]
+    else:
+        scores = (
+            jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+            + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+        ) * scale
+        bias = _mask_bias(positions, k_pos, causal=True, window=None)
+        if valid is not None:
+            bias = bias + jnp.where(valid, 0.0, -1e30)[None, :]
+        probs = jax.nn.softmax(scores + bias, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, s, h * m.v_dim).astype(x.dtype)
+    return out @ params["w_o"], new_cache
+
+
+def make_mla_cache(cfg, batch: int, cache_len: int, dtype) -> MLACache:
+    m = cfg.mla
+    return MLACache(jnp.zeros((batch, cache_len, m.kv_lora + m.rope_dim), dtype))

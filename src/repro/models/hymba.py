@@ -1,0 +1,153 @@
+"""Hymba (arXiv:2411.13676): hybrid-head blocks — attention and Mamba2-style
+SSD heads process the same input in parallel; outputs are normalised and
+averaged. 128 learnable meta tokens are prepended to every sequence. Most
+layers use sliding-window attention; {first, middle, last} are global.
+
+Simplifications vs the paper (recorded in DESIGN.md §5): attention and SSM
+branches run at full width and are averaged (the paper splits head groups and
+uses learned per-head mixing); cross-layer KV sharing is not implemented
+(caches are per-layer).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .api import ArchConfig
+from .attention import KVCache, gqa_attention, gqa_init, make_kv_cache
+from .build import layer_windows
+from .layers import (
+    cross_entropy_loss, dense_param, embed_param, rms_norm, swiglu_mlp,
+    swiglu_mlp_init,
+)
+from .ssm import SSDState, ssd, ssd_init, ssd_step
+
+
+class HymbaCaches(NamedTuple):
+    kv: list          # per layer KVCache
+    ssm: list         # per layer SSDState
+
+
+def hymba_init(rng, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(rng, cfg.num_layers + 4)
+    params: dict = {
+        "embed": embed_param(ks[0], cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "lm_head": dense_param(ks[1], cfg.d_model, cfg.vocab, cfg.dtype),
+        "meta_tokens": (
+            jax.random.normal(ks[2], (cfg.num_meta_tokens, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(cfg.dtype),
+        "layers": [],
+    }
+    layers = []
+    for i in range(cfg.num_layers):
+        ka, kb, kc = jax.random.split(ks[3 + i], 3)
+        layers.append(
+            {
+                "norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+                "attn": gqa_init(ka, cfg, cfg.dtype),
+                "attn_out_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+                "ssd": ssd_init(kb, cfg.d_model, cfg.num_heads, cfg.ssm.state_dim, cfg.dtype),
+                "ssd_out_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+                "ffn_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+                "mlp": swiglu_mlp_init(kc, cfg.d_model, cfg.d_ff, cfg.dtype),
+            }
+        )
+    params["layers"] = layers
+    return params
+
+
+def _forward(params, cfg: ArchConfig, tokens, caches: HymbaCaches | None = None,
+             positions=None):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    if s > 1:  # train/prefill: prepend meta tokens
+        meta = jnp.broadcast_to(
+            params["meta_tokens"][None], (b, cfg.num_meta_tokens, cfg.d_model)
+        ).astype(x.dtype)
+        x = jnp.concatenate([meta, x], axis=1)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    windows = layer_windows(cfg, cfg.num_layers)
+    train_mode = caches is None
+    new_kv, new_ssm = [], []
+
+    def layer_fwd(lp, xin, window):
+        h = rms_norm(xin, lp["norm"])
+        a, _ = gqa_attention(lp["attn"], h, positions, cfg, window=window)
+        m, nssm = ssd(lp["ssd"], h, cfg.num_heads, cfg.ssm.state_dim,
+                      chunk=cfg.ssm.chunk)
+        mixed = 0.5 * (
+            rms_norm(a, lp["attn_out_norm"]) + rms_norm(m, lp["ssd_out_norm"])
+        )
+        xo = xin + mixed
+        xo = xo + swiglu_mlp(lp["mlp"], rms_norm(xo, lp["ffn_norm"]))
+        return xo, nssm
+
+    layer_train = jax.checkpoint(layer_fwd, static_argnums=(2,)) if cfg.remat else layer_fwd
+
+    for i, lp in enumerate(params["layers"]):
+        window = int(windows[i]) or None
+        if train_mode:
+            x, nssm = layer_train(lp, x, window)
+            new_kv.append(None)
+            new_ssm.append(nssm)
+            continue
+        h = rms_norm(x, lp["norm"])
+        kv_c = caches.kv[i]
+        ssm_c = caches.ssm[i]
+        a, nkv = gqa_attention(
+            lp["attn"], h, positions, cfg, window=window, cache=kv_c,
+        )
+        if x.shape[1] == 1 and ssm_c is not None:
+            m, nssm = ssd_step(lp["ssd"], h, ssm_c, cfg.num_heads, cfg.ssm.state_dim)
+        else:
+            m, nssm = ssd(lp["ssd"], h, cfg.num_heads, cfg.ssm.state_dim,
+                          chunk=cfg.ssm.chunk)
+        mixed = 0.5 * (
+            rms_norm(a, lp["attn_out_norm"]) + rms_norm(m, lp["ssd_out_norm"])
+        )
+        x = x + mixed
+        x = x + swiglu_mlp(lp["mlp"], rms_norm(x, lp["ffn_norm"]))
+        new_kv.append(nkv)
+        new_ssm.append(nssm)
+    return x, HymbaCaches(new_kv, new_ssm) if caches is not None else None
+
+
+def hymba_loss(params, cfg: ArchConfig, batch, **_):
+    x, _ = _forward(params, cfg, batch["tokens"])
+    x = x[:, cfg.num_meta_tokens :]
+    logits = rms_norm(x, params["final_norm"]) @ params["lm_head"]
+    loss = cross_entropy_loss(logits, batch["labels"])
+    return loss, {"ce": loss}
+
+
+def hymba_make_caches(params, cfg: ArchConfig, batch: int, cache_len: int):
+    dh = cfg.d_model // cfg.num_heads
+    kv = [
+        make_kv_cache(cfg, batch, cache_len + cfg.num_meta_tokens, cfg.dtype)
+        for _ in range(cfg.num_layers)
+    ]
+    ssm = [
+        SSDState(jnp.zeros((batch, cfg.num_heads, cfg.ssm.state_dim, dh), jnp.float32))
+        for _ in range(cfg.num_layers)
+    ]
+    return HymbaCaches(kv, ssm)
+
+
+def hymba_decode_step(params, cfg: ArchConfig, token, caches, pos, **_):
+    positions = jnp.reshape(jnp.asarray(pos), (1,))
+    x, new_caches = _forward(params, cfg, token, caches, positions)
+    logits = rms_norm(x, params["final_norm"]) @ params["lm_head"]
+    return logits[:, -1], new_caches
+
+
+def hymba_prefill(params, cfg: ArchConfig, tokens, cache_len, **_):
+    caches = hymba_make_caches(params, cfg, tokens.shape[0], cache_len)
+    x, new_caches = _forward(params, cfg, tokens, caches)
+    logits = rms_norm(x, params["final_norm"]) @ params["lm_head"]
+    return logits[:, -1], new_caches

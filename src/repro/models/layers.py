@@ -1,0 +1,99 @@
+"""Common neural layers for the model zoo (functional, dict-of-arrays params).
+
+Parameter keys follow a naming convention that sharding/rules.py pattern-
+matches to assign PartitionSpecs — e.g. any key ending in ``w_up`` shards its
+last dim over the 'model' mesh axis. Compute runs in the config dtype
+(bf16 by default) with f32 for norms/softmax/logits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_param(rng, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_param(rng, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: [..., seq, dim(even)], positions: [..., seq]."""
+    dim = x.shape[-1]
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_mlp_init(rng, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_param(k1, d_model, d_ff, dtype),
+        "w_up": dense_param(k2, d_model, d_ff, dtype),
+        "w_down": dense_param(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    return (gate * (x @ params["w_up"])) @ params["w_down"]
+
+
+def gelu_mlp_init(rng, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w_up": dense_param(k1, d_model, d_ff, dtype),
+        "w_down": dense_param(k2, d_ff, d_model, dtype),
+    }
+
+
+def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ params["w_up"], approximate=True) @ params["w_down"]
+
+
+def geglu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    """Gemma-style GeGLU (same param layout as swiglu)."""
+    gate = jax.nn.gelu(x @ params["w_gate"], approximate=True)
+    return (gate * (x @ params["w_up"])) @ params["w_down"]
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    xf = x.astype(jnp.float32)
+    return (cap * jnp.tanh(xf / cap)).astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array, *, z_loss: float = 1e-4) -> jax.Array:
+    """Mean token CE in f32, with an optional z-loss stabiliser."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    loss = (lse - ll).mean()
+    if z_loss:
+        loss = loss + z_loss * (lse**2).mean()
+    return loss

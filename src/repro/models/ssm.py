@@ -1,0 +1,316 @@
+"""Recurrent sequence mixers: mLSTM (xLSTM), sLSTM (xLSTM), Mamba2-style SSD.
+
+One generic *chunked linear recurrence* drives both mLSTM and SSD:
+
+    state_t = a_t * state_{t-1} + k_t ⊗ v_t          (state: [dk, dv])
+    y_t     = q_t @ state_t
+
+computed chunk-parallel (intra-chunk masked matmuls with cumulative decay,
+inter-chunk lax.scan carrying the state) — the TPU-friendly formulation: the
+sequential dimension collapses to T/chunk scan steps of MXU matmuls.
+
+Stability adaptation (recorded in DESIGN.md §3): mLSTM's exponential input
+gate is implemented in its normalised form — the normaliser n_t is tracked by
+appending a ones-column to v, and gates use sigmoid/exp with per-step decay in
+log space, all decays <= 1. sLSTM keeps the published stabilised recurrence
+(m_t running max) and is inherently sequential (lax.scan over time).
+
+Every mixer has a decode step with O(1) state — this is what makes the
+long_500k shape runnable for the ssm/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_param
+
+
+# ------------------------------------------------- generic chunked recurrence
+
+def chunked_linear_recurrence(
+    q: jax.Array,        # [B, H, T, dk]
+    k: jax.Array,        # [B, H, T, dk]
+    v: jax.Array,        # [B, H, T, dv]
+    log_a: jax.Array,    # [B, H, T] per-step log decay (<= 0)
+    *,
+    chunk: int = 128,
+    init_state: jax.Array | None = None,   # [B, H, dk, dv]
+) -> tuple[jax.Array, jax.Array]:
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, t)
+    t_pad = (-t) % c
+    if t_pad:
+        # zero-pad to a chunk multiple: k=v=0 contributes nothing and
+        # log_a=0 leaves the carried state unchanged, so semantics hold
+        pad4 = ((0, 0), (0, 0), (0, t_pad), (0, 0))
+        q = jnp.pad(q, pad4)
+        k = jnp.pad(k, pad4)
+        v = jnp.pad(v, pad4)
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, t_pad)))
+    t_full = t + t_pad
+    nc = t_full // c
+    f32 = jnp.float32
+    qc = q.reshape(b, h, nc, c, dk).astype(f32)
+    kc = k.reshape(b, h, nc, c, dk).astype(f32)
+    vc = v.reshape(b, h, nc, c, dv).astype(f32)
+    la = log_a.reshape(b, h, nc, c).astype(f32)
+    cum = jnp.cumsum(la, axis=-1)                       # L_i within chunk
+
+    # One chunk per scan step: the [c, c] decay/score tensors exist for a
+    # single chunk at a time (streamed working set — VMEM-sized on TPU,
+    # bounded liveness in the memory analysis), instead of materialising
+    # [nc, c, c] for the whole sequence.
+    h0 = (
+        init_state.astype(f32)
+        if init_state is not None
+        else jnp.zeros((b, h, dk, dv), f32)
+    )
+    mask = jnp.tril(jnp.ones((c, c), bool))
+
+    def body(state, xs):
+        q_n, k_n, v_n, cum_n = xs                       # [b,h,c,*]
+        # intra-chunk: y[i] = sum_{j<=i} exp(L_i - L_j) (q_i.k_j) v_j
+        diff = cum_n[..., :, None] - cum_n[..., None, :]
+        decay = jnp.where(mask, jnp.exp(diff), 0.0)
+        s = jnp.einsum("bhid,bhjd->bhij", q_n, k_n) * decay
+        y_n = jnp.einsum("bhij,bhjv->bhiv", s, v_n)
+        # cross-chunk: y[i] += exp(L_i) * q_i @ state
+        y_n = y_n + jnp.einsum(
+            "bhid,bhdv->bhiv", q_n * jnp.exp(cum_n)[..., None], state
+        )
+        # carry: state = exp(L_last) * state + sum_j exp(L_last - L_j) k_j v_j
+        w = jnp.exp(cum_n[..., -1:] - cum_n)
+        summary = jnp.einsum("bhjd,bhj,bhjv->bhdv", k_n, w, v_n)
+        state = state * jnp.exp(cum_n[..., -1])[..., None, None] + summary
+        return state, y_n
+
+    xs = (
+        qc.transpose(2, 0, 1, 3, 4),
+        kc.transpose(2, 0, 1, 3, 4),
+        vc.transpose(2, 0, 1, 3, 4),
+        cum.transpose(2, 0, 1, 3),
+    )
+    final_state, y = jax.lax.scan(body, h0, xs)
+    y = y.transpose(1, 2, 0, 3, 4).reshape(b, h, t_full, dv)[:, :, :t]
+    return y, final_state
+
+
+def linear_recurrence_step(
+    q: jax.Array,      # [B, H, dk]
+    k: jax.Array,
+    v: jax.Array,      # [B, H, dv]
+    log_a: jax.Array,  # [B, H]
+    state: jax.Array,  # [B, H, dk, dv]
+) -> tuple[jax.Array, jax.Array]:
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = state * a + k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    return y, state
+
+
+# ----------------------------------------------------------------- mLSTM
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # [B, H, dk, dv+1] (last column = normaliser n)
+
+
+def mlstm_init(rng, d_model: int, num_heads: int, dtype) -> dict:
+    ks = jax.random.split(rng, 6)
+    dh = d_model // num_heads
+    return {
+        "w_q": dense_param(ks[0], d_model, d_model, dtype),
+        "w_k": dense_param(ks[1], d_model, d_model, dtype),
+        "w_v": dense_param(ks[2], d_model, d_model, dtype),
+        "w_if": dense_param(ks[3], d_model, 2 * num_heads, dtype),  # i,f gates
+        "w_o": dense_param(ks[4], d_model, d_model, dtype),
+        "out_norm": jnp.zeros((d_model,), dtype),
+    }
+
+
+def _mlstm_qkv(params, x, num_heads):
+    b, t, d = x.shape
+    dh = d // num_heads
+    def heads(y):
+        return y.reshape(b, t, num_heads, dh).transpose(0, 2, 1, 3)
+    q = heads(x @ params["w_q"]) * dh**-0.5
+    k = heads(x @ params["w_k"]) * dh**-0.5
+    v = heads(x @ params["w_v"])
+    gates = (x @ params["w_if"]).reshape(b, t, num_heads, 2).transpose(0, 2, 1, 3)
+    i_gate = jax.nn.sigmoid(gates[..., 0].astype(jnp.float32))
+    log_f = jax.nn.log_sigmoid(gates[..., 1].astype(jnp.float32))
+    return q, k, v, i_gate, log_f
+
+
+def _mlstm_out(params, y, x_dtype, b, t, d):
+    num = y[..., :-1]
+    den = y[..., -1:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.transpose(0, 2, 1, 3).reshape(b, t, d).astype(x_dtype)
+    from .layers import rms_norm
+    return rms_norm(h, params["out_norm"]) @ params["w_o"]
+
+
+def mlstm(params: dict, x: jax.Array, num_heads: int, *, chunk: int = 128):
+    """Parallel (training/prefill) mLSTM; returns output + final state."""
+    b, t, d = x.shape
+    q, k, v, i_gate, log_f = _mlstm_qkv(params, x, num_heads)
+    v1 = jnp.concatenate([v, jnp.ones((*v.shape[:-1], 1), v.dtype)], -1)
+    y, state = chunked_linear_recurrence(
+        q, k * i_gate[..., None].astype(k.dtype), v1, log_f, chunk=chunk
+    )
+    return _mlstm_out(params, y, x.dtype, b, t, d), MLSTMState(state)
+
+
+def mlstm_step(params: dict, x: jax.Array, state: MLSTMState, num_heads: int):
+    """O(1) decode step; x: [B, 1, d]."""
+    b, t, d = x.shape
+    q, k, v, i_gate, log_f = _mlstm_qkv(params, x, num_heads)
+    v1 = jnp.concatenate([v, jnp.ones((*v.shape[:-1], 1), v.dtype)], -1)
+    y, new = linear_recurrence_step(
+        q[:, :, 0], (k * i_gate[..., None].astype(k.dtype))[:, :, 0],
+        v1[:, :, 0], log_f[:, :, 0], state.c,
+    )
+    return _mlstm_out(params, y[:, :, None, :], x.dtype, b, 1, d), MLSTMState(new)
+
+
+# ----------------------------------------------------------------- sLSTM
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # [B, H, dh]
+    n: jax.Array   # [B, H, dh]
+    m: jax.Array   # [B, H, dh]
+    h: jax.Array   # [B, H, dh]
+
+
+def slstm_init(rng, d_model: int, num_heads: int, dtype) -> dict:
+    dh = d_model // num_heads
+    ks = jax.random.split(rng, 3)
+    return {
+        # 4 gates (i, f, z, o) from input and block-diagonal recurrence
+        "w_x": dense_param(ks[0], d_model, 4 * d_model, dtype),
+        "r_h": (jax.random.normal(ks[1], (num_heads, dh, 4 * dh), jnp.float32)
+                / dh**0.5).astype(dtype),
+        "b": jnp.zeros((4 * d_model,), dtype),
+        "w_o": dense_param(ks[2], d_model, d_model, dtype),
+        "out_norm": jnp.zeros((d_model,), dtype),
+    }
+
+
+def slstm_zero_state(batch: int, d_model: int, num_heads: int) -> SLSTMState:
+    dh = d_model // num_heads
+    z = jnp.zeros((batch, num_heads, dh), jnp.float32)
+    return SLSTMState(z, z, z - 10.0, z)
+
+
+def _slstm_cell(params, xg, state: SLSTMState, num_heads: int, dh: int):
+    """One stabilised sLSTM step. xg: [B, 4*d] pre-computed input gates."""
+    b = xg.shape[0]
+    rec = jnp.einsum("bhd,hdg->bhg", state.h.astype(jnp.float32),
+                     params["r_h"].astype(jnp.float32))
+    g = xg.reshape(b, num_heads, 4 * dh).astype(jnp.float32) + rec
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    m_new = jnp.maximum(gf + state.m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(gf + state.m - m_new)
+    c = f * state.c + i * jnp.tanh(gz)
+    n = f * state.n + i
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(jnp.abs(n), 1.0)
+    return SLSTMState(c, n, m_new, h)
+
+
+def slstm(params: dict, x: jax.Array, num_heads: int,
+          state: SLSTMState | None = None):
+    """Sequential sLSTM over time (lax.scan); returns output + final state."""
+    b, t, d = x.shape
+    dh = d // num_heads
+    xg = (x @ params["w_x"] + params["b"]).astype(jnp.float32)  # [B,T,4d]
+    if state is None:
+        state = slstm_zero_state(b, d, num_heads)
+
+    def body(st, xg_t):
+        st = _slstm_cell(params, xg_t, st, num_heads, dh)
+        return st, st.h
+
+    final, hs = jax.lax.scan(body, state, xg.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, t, d).astype(x.dtype)
+    from .layers import rms_norm
+    return rms_norm(h, params["out_norm"]) @ params["w_o"], final
+
+
+def slstm_step(params: dict, x: jax.Array, state: SLSTMState, num_heads: int):
+    b, t, d = x.shape
+    dh = d // num_heads
+    xg = (x[:, 0] @ params["w_x"] + params["b"]).astype(jnp.float32)
+    new = _slstm_cell(params, xg, state, num_heads, dh)
+    h = new.h.reshape(b, 1, d).astype(x.dtype)
+    from .layers import rms_norm
+    return rms_norm(h, params["out_norm"]) @ params["w_o"], new
+
+
+# ------------------------------------------------------------------- SSD
+
+class SSDState(NamedTuple):
+    h: jax.Array   # [B, H, N, dh]
+
+
+def ssd_init(rng, d_model: int, num_heads: int, state_dim: int, dtype) -> dict:
+    dh = d_model // num_heads
+    ks = jax.random.split(rng, 5)
+    return {
+        "w_x": dense_param(ks[0], d_model, d_model, dtype),
+        "w_b": dense_param(ks[1], d_model, num_heads * state_dim, dtype),
+        "w_c": dense_param(ks[2], d_model, num_heads * state_dim, dtype),
+        "w_dt": dense_param(ks[3], d_model, num_heads, dtype),
+        "a_log": jnp.zeros((num_heads,), jnp.float32),   # A = -exp(a_log)
+        "d_skip": jnp.ones((num_heads,), jnp.float32),
+        "w_o": dense_param(ks[4], d_model, d_model, dtype),
+        "out_norm": jnp.zeros((d_model,), dtype),
+    }
+
+
+def _ssd_proj(params, x, num_heads, state_dim):
+    b, t, d = x.shape
+    dh = d // num_heads
+    xs = (x @ params["w_x"]).reshape(b, t, num_heads, dh).transpose(0, 2, 1, 3)
+    bb = (x @ params["w_b"]).reshape(b, t, num_heads, state_dim).transpose(0, 2, 1, 3)
+    cc = (x @ params["w_c"]).reshape(b, t, num_heads, state_dim).transpose(0, 2, 1, 3)
+    dt = jax.nn.softplus((x @ params["w_dt"]).astype(jnp.float32))  # [b,t,h]
+    dt = dt.transpose(0, 2, 1)                                      # [b,h,t]
+    log_a = -jnp.exp(params["a_log"])[None, :, None] * dt           # <= 0
+    return xs, bb, cc, dt, log_a
+
+
+def _ssd_out(params, y, xs, x_dtype, b, t, d, num_heads):
+    y = y + xs.astype(jnp.float32) * params["d_skip"][None, :, None, None]
+    h = y.transpose(0, 2, 1, 3).reshape(b, t, d).astype(x_dtype)
+    from .layers import rms_norm
+    return rms_norm(h, params["out_norm"]) @ params["w_o"]
+
+
+def ssd(params: dict, x: jax.Array, num_heads: int, state_dim: int,
+        *, chunk: int = 128):
+    """Mamba2-style SSD (training/prefill); returns output + final state."""
+    b, t, d = x.shape
+    xs, bb, cc, dt, log_a = _ssd_proj(params, x, num_heads, state_dim)
+    v = xs * dt.astype(xs.dtype)[..., None]
+    y, state = chunked_linear_recurrence(cc, bb, v, log_a, chunk=chunk)
+    return _ssd_out(params, y, xs, x.dtype, b, t, d, num_heads), SSDState(state)
+
+
+def ssd_step(params: dict, x: jax.Array, state: SSDState, num_heads: int,
+             state_dim: int):
+    b, t, d = x.shape
+    xs, bb, cc, dt, log_a = _ssd_proj(params, x, num_heads, state_dim)
+    v = xs * dt.astype(xs.dtype)[..., None]
+    y, new = linear_recurrence_step(
+        cc[:, :, 0], bb[:, :, 0], v[:, :, 0], log_a[:, :, 0], state.h
+    )
+    return (
+        _ssd_out(params, y[:, :, None, :], xs, x.dtype, b, 1, d, num_heads),
+        SSDState(new),
+    )

@@ -1,0 +1,203 @@
+"""Whisper-small backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+The conv/mel audio frontend is a STUB per the assignment — `input_specs()`
+supplies precomputed frame embeddings [batch, frames=1500, d_model]. The
+backbone is faithful: sinusoidal-position encoder with bidirectional MHA,
+learned-position decoder with causal self-attention + cross-attention, GELU
+MLPs, pre-LayerNorm, tied unembedding.
+
+Decode carries (a) per-layer self-attention KV caches and (b) per-layer
+cross-attention K/V computed once from the encoder output at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .api import ArchConfig
+from .attention import KVCache, gqa_attention, gqa_init, make_kv_cache
+from .layers import (
+    cross_entropy_loss, dense_param, embed_param, gelu_mlp, gelu_mlp_init,
+    layer_norm,
+)
+
+
+class WhisperCaches(NamedTuple):
+    self_kv: list            # per decoder layer KVCache
+    cross_kv: list           # per decoder layer (k, v) from encoder
+
+
+def _ln_init(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _sinusoid(length: int, dim: int) -> np.ndarray:
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    return np.concatenate([np.sin(angle), np.cos(angle)], axis=1).astype(np.float32)
+
+
+def whisper_init(rng, cfg: ArchConfig) -> dict:
+    d, dtype = cfg.d_model, cfg.dtype
+    n_enc = n_dec = cfg.num_layers
+    ks = jax.random.split(rng, 2 * cfg.num_layers + 6)
+    ki = iter(ks)
+    params: dict = {
+        "embed": embed_param(next(ki), cfg.vocab, d, dtype),
+        # decoder learned positions sized to the largest serving shape
+        "pos_embed": (jax.random.normal(next(ki), (cfg.max_positions, d), jnp.float32) * 0.01).astype(dtype),
+        "enc_final_ln": _ln_init(d, dtype),
+        "dec_final_ln": _ln_init(d, dtype),
+        "enc_layers": [],
+        "dec_layers": [],
+    }
+    for _ in range(n_enc):
+        k1, k2 = jax.random.split(next(ki))
+        params["enc_layers"].append(
+            {
+                "ln1": _ln_init(d, dtype),
+                "attn": gqa_init(k1, cfg, dtype),
+                "ln2": _ln_init(d, dtype),
+                "mlp": gelu_mlp_init(k2, d, cfg.d_ff, dtype),
+            }
+        )
+    for _ in range(n_dec):
+        k1, k2, k3 = jax.random.split(next(ki), 3)
+        params["dec_layers"].append(
+            {
+                "ln1": _ln_init(d, dtype),
+                "self_attn": gqa_init(k1, cfg, dtype),
+                "ln2": _ln_init(d, dtype),
+                "cross_attn": gqa_init(k2, cfg, dtype),
+                "ln3": _ln_init(d, dtype),
+                "mlp": gelu_mlp_init(k3, d, cfg.d_ff, dtype),
+            }
+        )
+    return params
+
+
+def _ln(x, p):
+    return layer_norm(x, p["w"], p["b"])
+
+
+def whisper_encode(params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    b, f, d = frames.shape
+    x = frames.astype(cfg.dtype) + jnp.asarray(_sinusoid(f, d), cfg.dtype)[None]
+    pos = jnp.arange(f)
+
+    def layer(lp, xin):
+        h, _ = gqa_attention(lp["attn"], _ln(xin, lp["ln1"]), pos, cfg, causal=False)
+        xo = xin + h
+        return xo + gelu_mlp(lp["mlp"], _ln(xo, lp["ln2"]))
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    for lp in params["enc_layers"]:
+        x = layer(lp, x)
+    return _ln(x, params["enc_final_ln"])
+
+
+def _cross_kv(params_layer, cfg, enc_out):
+    b, f, d = enc_out.shape
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = (enc_out @ params_layer["cross_attn"]["w_k"]).reshape(b, f, hkv, hd).transpose(0, 2, 1, 3)
+    v = (enc_out @ params_layer["cross_attn"]["w_v"]).reshape(b, f, hkv, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def whisper_decode_stack(params, cfg, tokens, enc_out=None, caches=None, positions=None):
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    x = params["embed"][tokens] + jax.lax.dynamic_slice_in_dim(
+        params["pos_embed"], positions[0], s, axis=0
+    )[None].astype(cfg.dtype)
+    train_mode = caches is None
+
+    def layer(lp, xin):
+        h, _ = gqa_attention(lp["self_attn"], _ln(xin, lp["ln1"]), positions, cfg)
+        xo = xin + h
+        ckv = _cross_kv(lp, cfg, enc_out)
+        h, _ = gqa_attention(
+            lp["cross_attn"], _ln(xo, lp["ln2"]), positions, cfg, cross_kv=ckv,
+            causal=False,
+        )
+        xo = xo + h
+        return xo + gelu_mlp(lp["mlp"], _ln(xo, lp["ln3"])), ckv
+
+    layer_train = jax.checkpoint(layer) if cfg.remat else layer
+
+    new_self, cross_list = [], []
+    for i, lp in enumerate(params["dec_layers"]):
+        if train_mode:
+            x, ckv = layer_train(lp, x)
+            new_self.append(None)
+            cross_list.append(ckv)
+            continue
+        self_c = caches.self_kv[i]
+        h, nc = gqa_attention(
+            lp["self_attn"], _ln(x, lp["ln1"]), positions, cfg, cache=self_c
+        )
+        x = x + h
+        ckv = (
+            caches.cross_kv[i]
+            if caches.cross_kv is not None
+            else _cross_kv(lp, cfg, enc_out)
+        )
+        h, _ = gqa_attention(
+            lp["cross_attn"], _ln(x, lp["ln2"]), positions, cfg, cross_kv=ckv,
+            causal=False,
+        )
+        x = x + h
+        x = x + gelu_mlp(lp["mlp"], _ln(x, lp["ln3"]))
+        new_self.append(nc)
+        cross_list.append(ckv)
+    x = _ln(x, params["dec_final_ln"])
+    logits = x @ params["embed"].T  # tied
+    return logits, WhisperCaches(new_self, cross_list)
+
+
+def whisper_loss(params, cfg: ArchConfig, batch, **_):
+    enc_out = whisper_encode(params, cfg, batch["frames"])
+    logits, _ = whisper_decode_stack(params, cfg, batch["tokens"], enc_out)
+    loss = cross_entropy_loss(logits, batch["labels"])
+    return loss, {"ce": loss}
+
+
+def whisper_make_caches(params, cfg: ArchConfig, batch: int, cache_len: int):
+    self_kv = [make_kv_cache(cfg, batch, cache_len, cfg.dtype) for _ in range(cfg.num_layers)]
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    cross = [
+        (
+            jnp.zeros((batch, hkv, cfg.frontend_len, hd), cfg.dtype),
+            jnp.zeros((batch, hkv, cfg.frontend_len, hd), cfg.dtype),
+        )
+        for _ in range(cfg.num_layers)
+    ]
+    return WhisperCaches(self_kv, cross)
+
+
+def whisper_decode_step(params, cfg: ArchConfig, token, caches, pos, **_):
+    positions = jnp.reshape(jnp.asarray(pos), (1,))
+    logits, new_caches = whisper_decode_stack(
+        params, cfg, token, caches=caches, positions=positions
+    )
+    return logits[:, -1], new_caches
+
+
+def whisper_prefill(params, cfg: ArchConfig, batch, cache_len, **_):
+    """batch: {frames, tokens}; returns last logits + caches (self + cross)."""
+    enc_out = whisper_encode(params, cfg, batch["frames"])
+    caches = whisper_make_caches(params, cfg, batch["tokens"].shape[0], cache_len)
+    # fill cross caches from the encoder, then run the prompt with self caches
+    cross = [_cross_kv(lp, cfg, enc_out) for lp in params["dec_layers"]]
+    caches = WhisperCaches(caches.self_kv, cross)
+    logits, new_caches = whisper_decode_stack(
+        params, cfg, batch["tokens"], caches=caches
+    )
+    return logits[:, -1], new_caches

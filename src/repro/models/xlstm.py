@@ -1,0 +1,116 @@
+"""xLSTM LM (arXiv:2405.04517): alternating mLSTM / sLSTM blocks.
+
+Assignment config (xlstm-125m): 12L, d_model=768, 4 heads, d_ff=0 (no separate
+FFN blocks — mixing blocks only), vocab 50304. Layers alternate mLSTM (even)
+and sLSTM (odd). mLSTM trains chunk-parallel; sLSTM is a sequential lax.scan
+(its recurrence is not parallelisable — inherent to the architecture). Decode
+carries O(1) recurrent state per layer, which is what makes long_500k decoding
+linear-time/constant-memory for this family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .api import ArchConfig
+from .layers import cross_entropy_loss, dense_param, embed_param, rms_norm
+from .ssm import (
+    MLSTMState, SLSTMState, mlstm, mlstm_init, mlstm_step, slstm,
+    slstm_init, slstm_step, slstm_zero_state,
+)
+
+
+def xlstm_init(rng, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(rng, cfg.num_layers + 3)
+    params: dict = {
+        "embed": embed_param(ks[0], cfg.vocab, cfg.d_model, cfg.dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "lm_head": dense_param(ks[1], cfg.d_model, cfg.vocab, cfg.dtype),
+        "layers": [],
+    }
+    layers = []
+    for i in range(cfg.num_layers):
+        k = ks[2 + i]
+        if i % 2 == 0:
+            layers.append(
+                {"kind_mlstm": mlstm_init(k, cfg.d_model, cfg.num_heads, cfg.dtype),
+                 "norm": jnp.zeros((cfg.d_model,), cfg.dtype)}
+            )
+        else:
+            layers.append(
+                {"kind_slstm": slstm_init(k, cfg.d_model, cfg.num_heads, cfg.dtype),
+                 "norm": jnp.zeros((cfg.d_model,), cfg.dtype)}
+            )
+    params["layers"] = layers
+    return params
+
+
+def _forward(params, cfg: ArchConfig, tokens, states=None):
+    x = params["embed"][tokens]
+    chunk = cfg.ssm.chunk if cfg.ssm else 128
+    train_mode = tokens.shape[1] > 1 and states is None
+    new_states = []
+
+    def mlstm_layer(lp, h):
+        return mlstm(lp["kind_mlstm"], h, cfg.num_heads, chunk=chunk)
+
+    def slstm_layer(lp, h):
+        return slstm(lp["kind_slstm"], h, cfg.num_heads, state=None)
+
+    if cfg.remat and train_mode:
+        mlstm_layer = jax.checkpoint(mlstm_layer)
+        slstm_layer = jax.checkpoint(slstm_layer)
+
+    for i, lp in enumerate(params["layers"]):
+        h = rms_norm(x, lp["norm"])
+        st = states[i] if states is not None else None
+        if "kind_mlstm" in lp:
+            if tokens.shape[1] == 1 and st is not None:
+                out, ns = mlstm_step(lp["kind_mlstm"], h, st, cfg.num_heads)
+            elif train_mode:
+                out, ns = mlstm_layer(lp, h)
+            else:
+                out, ns = mlstm(lp["kind_mlstm"], h, cfg.num_heads, chunk=chunk)
+        else:
+            if tokens.shape[1] == 1 and st is not None:
+                out, ns = slstm_step(lp["kind_slstm"], h, st, cfg.num_heads)
+            elif train_mode:
+                out, ns = slstm_layer(lp, h)
+            else:
+                out, ns = slstm(lp["kind_slstm"], h, cfg.num_heads, state=st)
+        x = x + out
+        new_states.append(ns)
+    return x, new_states
+
+
+def xlstm_loss(params, cfg: ArchConfig, batch, **_):
+    x, _ = _forward(params, cfg, batch["tokens"])
+    logits = rms_norm(x, params["final_norm"]) @ params["lm_head"]
+    loss = cross_entropy_loss(logits, batch["labels"])
+    return loss, {"ce": loss}
+
+
+def xlstm_make_states(params, cfg: ArchConfig, batch: int):
+    states = []
+    dh = cfg.d_model // cfg.num_heads
+    for i in range(cfg.num_layers):
+        if i % 2 == 0:
+            states.append(
+                MLSTMState(jnp.zeros((batch, cfg.num_heads, dh, dh + 1), jnp.float32))
+            )
+        else:
+            states.append(slstm_zero_state(batch, cfg.d_model, cfg.num_heads))
+    return states
+
+
+def xlstm_decode_step(params, cfg: ArchConfig, token, states, pos, **_):
+    x, new_states = _forward(params, cfg, token, states)
+    logits = rms_norm(x, params["final_norm"]) @ params["lm_head"]
+    return logits[:, -1], new_states
+
+
+def xlstm_prefill(params, cfg: ArchConfig, tokens, cache_len=None, **_):
+    x, states = _forward(params, cfg, tokens)
+    logits = rms_norm(x, params["final_norm"]) @ params["lm_head"]
+    return logits[:, -1], states

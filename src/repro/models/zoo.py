@@ -1,0 +1,111 @@
+"""build_model: ArchConfig -> ModelSpec, for all families.
+
+Also defines input_specs() — the ShapeDtypeStruct stand-ins the multi-pod
+dry-run lowers against (weak-type-correct, shardable, no device allocation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import build as lm
+from . import hymba as hy
+from . import whisper as wh
+from . import xlstm as xl
+from .api import ArchConfig, ModelSpec, ShapeSpec
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.frontend == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), jnp.float32
+        )
+    elif cfg.frontend == "vision":
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), jnp.float32
+        )
+    return specs
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec, spec_caches) -> dict:
+    b = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "caches": spec_caches,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def build_model(cfg: ArchConfig, *, mesh=None, data_axes=("data",)) -> ModelSpec:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def loss_fn(params, batch):
+            return lm.lm_loss(params, cfg, batch, mesh=mesh, data_axes=data_axes)
+
+        def make_caches(params, batch, cache_len):
+            extra = cfg.frontend_len + cfg.num_meta_tokens
+            return lm.lm_make_caches(params, cfg, batch, cache_len + extra)
+
+        def decode_step(params, token, caches, pos):
+            return lm.lm_decode_step(
+                params, cfg, token, caches, pos, mesh=mesh, data_axes=data_axes
+            )
+
+        def prefill(params, batch, cache_len):
+            tokens = batch["tokens"] if isinstance(batch, dict) else batch
+            return lm.lm_prefill(
+                params, cfg, tokens, cache_len, mesh=mesh, data_axes=data_axes
+            )
+
+        return ModelSpec(
+            cfg=cfg,
+            init=functools.partial(lm._lm_init, cfg=cfg),
+            loss_fn=loss_fn,
+            prefill=prefill,
+            decode_step=decode_step,
+            make_caches=make_caches,
+        )
+    if fam == "audio":
+        return ModelSpec(
+            cfg=cfg,
+            init=functools.partial(wh.whisper_init, cfg=cfg),
+            loss_fn=lambda p, b: wh.whisper_loss(p, cfg, b),
+            prefill=lambda p, b, n: wh.whisper_prefill(p, cfg, b, n),
+            decode_step=lambda p, t, c, pos: wh.whisper_decode_step(p, cfg, t, c, pos),
+            make_caches=lambda p, b, n: wh.whisper_make_caches(p, cfg, b, n),
+        )
+    if fam == "ssm":
+        return ModelSpec(
+            cfg=cfg,
+            init=functools.partial(xl.xlstm_init, cfg=cfg),
+            loss_fn=lambda p, b: xl.xlstm_loss(p, cfg, b),
+            prefill=lambda p, b, n: xl.xlstm_prefill(
+                p, cfg, b["tokens"] if isinstance(b, dict) else b
+            ),
+            decode_step=lambda p, t, c, pos: xl.xlstm_decode_step(p, cfg, t, c, pos),
+            make_caches=lambda p, b, n: xl.xlstm_make_states(p, cfg, b),
+        )
+    if fam == "hybrid":
+        return ModelSpec(
+            cfg=cfg,
+            init=functools.partial(hy.hymba_init, cfg=cfg),
+            loss_fn=lambda p, b: hy.hymba_loss(p, cfg, b),
+            prefill=lambda p, b, n: hy.hymba_prefill(
+                p, cfg, b["tokens"] if isinstance(b, dict) else b, n
+            ),
+            decode_step=lambda p, t, c, pos: hy.hymba_decode_step(p, cfg, t, c, pos),
+            make_caches=lambda p, b, n: hy.hymba_make_caches(p, cfg, b, n),
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

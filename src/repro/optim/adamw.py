@@ -1,0 +1,135 @@
+"""AdamW with global-norm clipping, ZeRO-1 moment sharding, and optional
+gradient compression (optim/compression.py) — self-contained, no optax.
+
+ZeRO-1: Adam moments follow the param TP sharding *plus* the largest
+still-unsharded dim is sharded over the 'data' axis when divisible — the
+optimizer state (the largest training-memory term) thus scales down with the
+full mesh, while params keep their TP layout for fast matmuls. The sharding
+is applied through jit out_shardings by the launcher (moment_shardings()).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.float32
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / jnp.maximum(1.0, cfg.warmup_steps))
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads: Any, opt_state: dict, params: Any, cfg: AdamWConfig
+) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics). All math in f32."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m32 / b1c
+        vh = v32 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    new = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree.unflatten(tdef, [t[0] for t in new])
+    new_m = jax.tree.unflatten(tdef, [t[1] for t in new])
+    new_v = jax.tree.unflatten(tdef, [t[2] for t in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+def moment_shardings(
+    param_shardings: Any,
+    mesh: Mesh,
+    *,
+    data_axis: str = "data",
+) -> dict:
+    """ZeRO-1 moment shardings: param spec + 'data' on the largest free dim.
+
+    Requires the params pytree of shardings AND the corresponding shapes are
+    implied by usage: we only rewrite the PartitionSpec, so callers pass a
+    pytree of (sharding, shape) via .shape-bearing leaves at init time.
+    """
+    dsize = mesh.shape[data_axis]
+
+    def zero1(sh: NamedSharding, leaf) -> NamedSharding:
+        spec = list(sh.spec) + [None] * (leaf.ndim - len(sh.spec))
+        used = {a for s in spec if s is not None for a in (s if isinstance(s, tuple) else (s,))}
+        if data_axis in used:  # FSDP params already consume the data axis
+            return NamedSharding(mesh, P(*spec))
+        best, best_size = -1, 0
+        for i, (ax, dim) in enumerate(zip(spec, leaf.shape)):
+            if ax is None and dim % dsize == 0 and dim > best_size and dim >= dsize:
+                best, best_size = i, dim
+        if best >= 0:
+            spec[best] = data_axis
+        return NamedSharding(mesh, P(*spec))
+
+    return zero1
+
+
+def build_opt_shardings(params_shape: Any, p_shardings: Any, mesh: Mesh,
+                        *, data_axis: str = "data") -> dict:
+    zero1 = moment_shardings(p_shardings, mesh, data_axis=data_axis)
+    mom = jax.tree.map(zero1, p_shardings, params_shape)
+    return {
+        "m": mom,
+        "v": mom,
+        "step": NamedSharding(mesh, P()),
+    }

@@ -1,0 +1,89 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantisation of gradients before the data-parallel reduction, with
+an error-feedback residual so compression noise is unbiased over steps
+(Seide et al. / EF-SGD family). On real multi-slice deployments the quantised
+tensors are what crosses DCI between pods — an 4x wire-size reduction for the
+pod-level all-reduce; here the compress->reduce->decompress pipeline is
+implemented functionally (correct semantics, testable) and the launcher
+enables it per-axis via TrainConfig.grad_compression.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def compress(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """-> (int8 payload, f32 per-block scales). Blockwise symmetric quant."""
+    flat, _ = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def decompress(q: jax.Array, scale: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    import math
+
+    n = math.prod(shape)
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    return flat[:n].reshape(shape)
+
+
+def compress_grads_with_feedback(
+    grads: Any, residual: Any
+) -> tuple[Any, Any]:
+    """Error-feedback compression: g' = Q(g + r); r' = (g + r) - g'."""
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = compress(target)
+        deq = decompress(q, s, g.shape)
+        return deq.astype(g.dtype), target - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        jax.tree.unflatten(tdef, [o[0] for o in outs]),
+        jax.tree.unflatten(tdef, [o[1] for o in outs]),
+    )
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum_mean(x: jax.Array, axis: str) -> jax.Array:
+    """Mean-reduce `x` over a (slow, cross-pod) mesh axis with int8 wire.
+
+    For use inside shard_map: quantise locally, all_gather the int8 payload +
+    f32 block scales over `axis` (the bytes that cross DCI are 1/4 of bf16),
+    dequantise and average locally. The within-pod (fast ICI) reduction stays
+    full precision — this implements the hierarchical scheme from DESIGN.md:
+    ICI psum in bf16/f32, DCI hop compressed.
+
+    The int8 all-gather is verifiable in the compiled HLO (s8[...] operand) —
+    tests/test_substrate.py asserts it.
+    """
+    q, scale = compress(x)
+    qs = jax.lax.all_gather(q, axis)          # int8 across the slow axis
+    ss = jax.lax.all_gather(scale, axis)
+    n = qs.shape[0]
+    deq = jax.vmap(lambda qq, sc: decompress(qq, sc, x.shape))(qs, ss)
+    return jnp.mean(deq, axis=0).astype(x.dtype)

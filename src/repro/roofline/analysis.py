@@ -1,0 +1,222 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs   / (chips x peak_FLOPs)
+    memory     = HLO_bytes   / (chips x HBM_bw)
+    collective = sum over collective ops of bytes / (chips x link_bw)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(). Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO text and sum operand sizes
+of all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops. Hardware constants are TPU v5e-class: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (set in HW).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 / chip
+    hbm_bw: float = 819e9            # bytes/s / chip
+    ici_bw: float = 50e9             # bytes/s / link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of 'bf16[1024,512]' — tuple types handled by the caller."""
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int] = field(default_factory=dict)
+    count_by_kind: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+_WIRE_FACTOR = {
+    # ring algorithms: wire bytes per device relative to the tensor size
+    "all-reduce": 2.0,        # reduce-scatter + all-gather phases
+    "all-gather": 1.0,        # (n-1)/n ~= 1
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum wire bytes of every collective op in optimized (per-device) HLO.
+
+    Output-shape bytes x ring wire factor; all-reduce counts 2x (RS+AG
+    phases). `-start` variants are matched once (the `-done` op has no shape
+    payload of its own in the same form).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # e.g.:  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups=...
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[^=]*?)\s*([\w\-]+)\(", s)
+        if not m:
+            continue
+        type_part, op = m.groups()
+        if op.endswith("-done"):
+            continue
+        kind = next((k for k in _COLLECTIVE_KINDS if op.startswith(k)), None)
+        if kind is None:
+            continue
+        total = 0
+        for piece in re.findall(r"(\w+\[[\d,]*\])", type_part):
+            total += _shape_bytes(piece)
+        total = int(total * _WIRE_FACTOR[kind])
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + total
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+    hw: HW
+    collectives: CollectiveStats | None = None
+    per_device_hbm_peak: float | None = None
+
+    @property
+    def t_compute(self) -> float:
+        # cost_analysis() reports the per-device partitioned module
+        # (verified experimentally, see EXPERIMENTS.md §Dry-run): divide by a
+        # single chip's peak.
+        return self.flops / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        # per-device wire bytes (already ring-factor adjusted) over one
+        # chip's ICI link bandwidth — conservative single-link serialisation
+        return self.collective_bytes / self.hw.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def mfu_upper_bound(self, model_flops: float) -> float:
+        """Fraction of peak the *useful* model FLOPs could reach if the run
+        takes exactly the dominant roofline term."""
+        if self.bound_time == 0:
+            return 0.0
+        return model_flops / (self.chips * self.hw.peak_flops * self.bound_time)
+
+
+def analyze_compiled(compiled, chips: int, hw: HW = HW()) -> Roofline:
+    """Roofline from a jax Compiled object (dry-run artifact)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = parse_collectives(text)
+    mem = compiled.memory_analysis()
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak is None:
+        peak = getattr(mem, "temp_size_in_bytes", 0) + getattr(
+            mem, "argument_size_in_bytes", 0
+        ) + getattr(mem, "output_size_in_bytes", 0)
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=float(coll.total_bytes),
+        chips=chips,
+        hw=hw,
+        collectives=coll,
+        per_device_hbm_peak=float(peak) if peak is not None else None,
+    )
+
+
+def model_flops_train(cfg, shape) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE), D = tokens processed."""
+    n_active = active_param_count(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    return 6.0 * n_active * tokens
+
+
+def model_flops_decode(cfg, shape) -> float:
+    """Decode processes global_batch tokens (one step)."""
+    return 6.0 * active_param_count(cfg) * shape.global_batch
+
+
+def active_param_count(cfg) -> int:
+    """Active (per-token) parameter count from the architecture config."""
+    d, v, L = cfg.d_model, cfg.vocab, cfg.num_layers
+    hd = cfg.resolved_head_dim
+    total = 2 * v * d if not cfg.tie_embeddings else v * d
+    n_dense = cfg.num_dense_layers if cfg.moe else L
+    n_moe = L - n_dense if cfg.moe else 0
+
+    if cfg.mla is not None:
+        m = cfg.mla
+        attn = (
+            d * m.q_lora + m.q_lora * cfg.num_heads * (m.qk_nope_dim + m.rope_dim)
+            + d * (m.kv_lora + m.rope_dim)
+            + m.kv_lora * cfg.num_heads * (m.qk_nope_dim + m.v_dim)
+            + cfg.num_heads * m.v_dim * d
+        )
+    else:
+        attn = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd + cfg.num_heads * hd * d
+
+    def mlp_params(ff, gated=True):
+        return (3 if gated else 2) * d * ff
+
+    dense_mlp = mlp_params(cfg.d_ff, cfg.mlp_kind != "gelu") if cfg.d_ff else 0
+    total += n_dense * (attn + dense_mlp)
+    if cfg.moe:
+        active_experts = cfg.moe.top_k + cfg.moe.num_shared
+        total += n_moe * (attn + active_experts * mlp_params(cfg.moe_d_ff))
+    if cfg.ssm is not None or cfg.family in ("ssm", "hybrid"):
+        total += L * 4 * d * d  # mixer projections (approximate)
+    return int(total)

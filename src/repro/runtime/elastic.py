@@ -1,0 +1,56 @@
+"""Elastic re-meshing: resume a run on a different device count.
+
+The checkpoint format is mesh-agnostic (full logical arrays), so elasticity
+reduces to: build a new mesh from surviving devices, recompute shardings for
+that mesh (the same rules scale to any axis sizes), and `restore` with the
+new shardings. On 1000+ nodes you'd do the same with a device-set from the
+cluster manager; the math below picks the largest (data x model) grid that
+fits the survivors, preferring to shrink the data axis first (keeps TP
+layouts, only changes gradient-reduction span).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+from repro.sharding import param_shardings
+
+
+def best_mesh_shape(n_devices: int, *, model_parallel: int) -> tuple[int, int]:
+    """(data, model) for the surviving device count; model axis preserved
+    while possible, else reduced to the largest divisor that fits."""
+    model = min(model_parallel, n_devices)
+    while model > 1 and (n_devices % model or model > n_devices):
+        model -= 1
+    data = n_devices // model
+    return data, model
+
+
+def remesh(
+    devices: Sequence[jax.Device],
+    *,
+    model_parallel: int,
+    axis_names: tuple[str, str] = ("data", "model"),
+) -> Mesh:
+    data, model = best_mesh_shape(len(devices), model_parallel=model_parallel)
+    usable = list(devices)[: data * model]
+    import numpy as np
+
+    return Mesh(np.asarray(usable).reshape(data, model), axis_names)
+
+
+def reshard_state(state_like: Any, mesh: Mesh, params_key: str = "params") -> Any:
+    """Shardings pytree for a {params, opt, step} state on the new mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    out = {}
+    for key, sub in state_like.items():
+        if key == params_key:
+            out[key] = param_shardings(sub, mesh)
+        else:
+            out[key] = jax.tree.map(lambda _: NamedSharding(mesh, P()), sub)
+    return out

@@ -1,0 +1,5 @@
+"""Sharding rules for pjit distribution."""
+
+from .rules import batch_shardings, cache_shardings, param_shardings, spec_for_param
+
+__all__ = ["batch_shardings", "cache_shardings", "param_shardings", "spec_for_param"]

@@ -1,0 +1,216 @@
+"""Logical-axis sharding rules: parameter/activation paths -> PartitionSpecs.
+
+Rules pattern-match the *last key* of each parameter path (the layers use a
+stable naming convention) and align to the trailing dims, so stacked-layer
+params ([L, ...]) pick up a leading None automatically. A dim is only sharded
+if its size is divisible by the product of the requested mesh axes AND at
+least ``min_shard_size`` — small tensors (norms, gates, tiny models) stay
+replicated rather than forcing XLA into pathological reshard chains.
+
+TP layout: column-parallel in-projections (w_q/w_k/w_v/w_up/w_gate...),
+row-parallel out-projections (w_o/w_down), vocab-sharded embedding + head,
+expert-sharded MoE tensors (EP), everything else replicated. DP/ZeRO handling
+for optimizer state lives in optim/adamw.py (extra 'data' sharding).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (last-key regex, trailing spec) — first match wins. 'M' = model axis.
+_RULES: list[tuple[str, tuple]] = [
+    (r"^(embed)$", ("M", None)),
+    (r"^(meta_tokens|pos_embed)$", (None, None)),
+    (r"^(lm_head)$", (None, "M")),
+    (r"^(w_q|w_k|w_v|w_uq|w_uk|w_uv|w_gate|w_up|w_if|w_b|w_c|w_dt|w_x)$", (None, "M")),
+    (r"^(shared_gate|shared_up)$", (None, "M")),
+    (r"^(w_o|w_down|shared_down)$", ("M", None)),
+    (r"^(expert_gate|expert_up|expert_down)$", ("M", None, None)),
+    (r"^(w_dq|w_dkv|router|mtp_proj)$", (None, None)),
+    (r"^(r_h)$", (None, None, None)),
+]
+
+
+def spec_for_param(
+    path: str,
+    shape: tuple[int, ...],
+    *,
+    model_axis: str | tuple[str, ...] = "model",
+    model_size: int = 1,
+    min_shard_size: int = 256,
+) -> P:
+    key = path.split("/")[-1]
+    for pattern, trailing in _RULES:
+        if re.match(pattern, key):
+            spec = [None] * (len(shape) - len(trailing)) + [
+                (model_axis if t == "M" else None) for t in trailing
+            ]
+            # divisibility gate per dim; size gate on the whole tensor (a
+            # 64-expert dim on a huge tensor must still shard)
+            total = math.prod(shape) if shape else 0
+            for i, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                if shape[i] % model_size or total < min_shard_size:
+                    spec[i] = None
+            return P(*spec)
+    return P()  # replicated (norms, biases, scalars)
+
+
+def _paths(tree: Any, prefix: str = "") -> Any:
+    """Mirror pytree with 'a/b/c' path strings at the leaves."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, _: prefix + "/".join(_key_str(k) for k in kp), tree
+    )
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def param_shardings(
+    params_shape: Any,
+    mesh: Mesh,
+    *,
+    model_axis: str = "model",
+    min_shard_size: int = 256,
+    fsdp_threshold_bytes: float = 4e9,
+    force_fsdp: bool | None = None,
+    replicate_patterns: tuple[str, ...] = (),
+    expert_axes: tuple[str, ...] | None = None,
+) -> Any:
+    """NamedShardings for a params pytree (of arrays or ShapeDtypeStructs).
+
+    If the TP-sharded per-device parameter footprint exceeds
+    ``fsdp_threshold_bytes``, large tensors additionally shard their biggest
+    free dim over the data axes (FSDP/ZeRO-3): XLA all-gathers weights per use
+    and reduce-scatters their grads — mandatory for the 671B-class config to
+    fit HBM, unnecessary overhead for small models (hence the gate).
+    """
+    model_size = mesh.shape[model_axis]
+    data_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    dsize = math.prod(mesh.shape[a] for a in data_axes)
+    paths = _paths(params_shape)
+
+    ep_size = math.prod(mesh.shape[a] for a in expert_axes) if expert_axes else 0
+
+    def base_spec(leaf, path):
+        key = path.split("/")[-1]
+        if any(re.match(p, key) for p in replicate_patterns):
+            return P(*([None] * leaf.ndim))
+        if expert_axes is not None:
+            # full-EP serving layout: expert/shared-FFN tensors sharded over
+            # every mesh axis (weights stationary; see models/build.py)
+            if re.match(r"^(expert_gate|expert_up|expert_down)$", key):
+                if leaf.shape[-3] % ep_size == 0:
+                    return P(*([None] * (leaf.ndim - 3)), expert_axes, None, None)
+            if re.match(r"^(shared_gate|shared_up)$", key):
+                if leaf.shape[-1] % ep_size == 0:
+                    return P(*([None] * (leaf.ndim - 1)), expert_axes)
+            if re.match(r"^(shared_down)$", key):
+                if leaf.shape[-2] % ep_size == 0:
+                    return P(*([None] * (leaf.ndim - 2)), expert_axes, None)
+        return spec_for_param(
+            path, leaf.shape,
+            model_axis=model_axis, model_size=model_size,
+            min_shard_size=min_shard_size,
+        )
+
+    def per_dev_bytes(leaf, spec):
+        n = math.prod(leaf.shape)
+        for i, ax in enumerate(spec):
+            if ax == model_axis:
+                n //= model_size
+        return n * leaf.dtype.itemsize
+
+    leaves = jax.tree.leaves(params_shape)
+    specs = jax.tree.leaves(jax.tree.map(base_spec, params_shape, paths))
+    total_per_dev = sum(per_dev_bytes(l, s) for l, s in zip(leaves, specs))
+    use_fsdp = (
+        force_fsdp if force_fsdp is not None
+        else total_per_dev > fsdp_threshold_bytes
+    )
+
+    def final_spec(leaf, path):
+        spec = list(base_spec(leaf, path))
+        spec += [None] * (leaf.ndim - len(spec))
+        used = {
+            a
+            for s in spec
+            if s is not None
+            for a in (s if isinstance(s, tuple) else (s,))
+        }
+        if (
+            use_fsdp
+            and math.prod(leaf.shape) >= 2**20
+            and not any(a in used for a in data_axes)
+        ):
+            best, best_size = -1, 0
+            for i, (ax, dim) in enumerate(zip(spec, leaf.shape)):
+                if ax is None and dim % dsize == 0 and dim > best_size:
+                    best, best_size = i, dim
+            if best >= 0:
+                spec[best] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(final_spec, params_shape, paths)
+
+
+def batch_shardings(batch_specs: Any, mesh: Mesh, data_axes: tuple[str, ...]) -> Any:
+    """Inputs: shard dim0 (global batch) over the data axes when divisible."""
+    dsize = math.prod(mesh.shape[a] for a in data_axes)
+
+    def spec(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % dsize == 0 and leaf.shape[0] >= dsize:
+            return NamedSharding(mesh, P(data_axes, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(spec, batch_specs)
+
+
+def cache_shardings(
+    caches: Any,
+    mesh: Mesh,
+    data_axes: tuple[str, ...],
+    *,
+    model_axis: str = "model",
+    seq_dim_by_rank: dict[int, int] | None = None,
+) -> Any:
+    """Decode caches: batch dim over data axes; if batch is unshardable
+    (long-context batch=1), shard the sequence dim over the model axis (cache
+    sequence-parallelism) — and over everything for 500k caches."""
+    dsize = math.prod(mesh.shape[a] for a in data_axes)
+    msize = mesh.shape[model_axis]
+
+    def spec(leaf):
+        nd = leaf.ndim
+        parts: list = [None] * nd
+        if nd >= 1 and leaf.shape[0] % dsize == 0 and leaf.shape[0] >= dsize:
+            parts[0] = data_axes
+            # additionally shard long sequence dims over model
+            for i in range(1, nd):
+                if leaf.shape[i] >= 16_384 and leaf.shape[i] % msize == 0:
+                    parts[i] = model_axis
+                    break
+        else:
+            # batch unshardable: find a long dim to shard over everything
+            for i in range(1, nd):
+                if leaf.shape[i] >= 16_384 and leaf.shape[i] % (dsize * msize) == 0:
+                    parts[i] = (*data_axes, model_axis)
+                    break
+                if leaf.shape[i] >= 16_384 and leaf.shape[i] % msize == 0:
+                    parts[i] = model_axis
+                    break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(spec, caches)

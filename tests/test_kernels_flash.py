@@ -1,0 +1,58 @@
+"""flash_attention Pallas kernel vs the direct-softmax oracle (shape/dtype
+sweep, window/softcap/causal variants, GQA group factors)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import reference_attention
+
+
+def _case(b, hq, hkv, s, d, *, window=None, cap=None, causal=True,
+          dtype=jnp.float32, tol=2e-5):
+    rng = np.random.default_rng(hash((b, hq, hkv, s, d)) % 2**31)
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          interpret=True)
+    ref = reference_attention(q, k, v, causal=causal, window=window, softcap=cap)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("s", [128, 256, 512])
+@pytest.mark.parametrize("d", [64, 128])
+def test_shape_sweep(s, d):
+    _case(2, 4, 2, s, d)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (8, 1)])
+def test_gqa_groups(hq, hkv):
+    _case(1, hq, hkv, 256, 64)
+
+
+@pytest.mark.parametrize("window", [64, 128, 1000])
+def test_sliding_window(window):
+    _case(1, 2, 2, 256, 64, window=window)
+
+
+@pytest.mark.parametrize("cap", [20.0, 50.0])
+def test_softcap(cap):
+    _case(1, 2, 1, 256, 64, cap=cap)
+
+
+def test_non_causal():
+    _case(1, 2, 2, 128, 64, causal=False)
+
+
+def test_combined_gemma2_style():
+    # gemma2 local layer: window + softcap + GQA
+    _case(2, 8, 4, 512, 128, window=128, cap=50.0)
+
+
+def test_bfloat16():
+    _case(1, 4, 2, 256, 64, dtype=jnp.bfloat16, tol=2e-2)

@@ -1,0 +1,78 @@
+"""End-to-end mapper tests: paper running example, benchmark suite subset,
+functional equivalence of mapped execution, joint-baseline agreement."""
+
+import pytest
+
+from repro.core import CGRA, map_dfg, running_example
+from repro.core.baseline import HAVE_Z3, map_dfg_joint
+from repro.core.benchsuite import TABLE3_BENCHMARKS, load_suite, make_benchmark_dfg
+from repro.core.simulate import check_equivalence, check_register_pressure
+
+
+def test_running_example_maps_at_paper_ii():
+    res = map_dfg(running_example(), CGRA(2, 2), time_budget_s=30)
+    assert res.ok
+    assert res.mapping.ii == 4          # paper Fig. 2b: II = 4 = mII
+    assert res.mapping.validate() == []
+
+
+def test_running_example_functional_equivalence():
+    res = map_dfg(running_example(), CGRA(2, 2), time_budget_s=30)
+    rep = check_equivalence(res.mapping, num_iters=8)
+    assert rep.cycles == res.mapping.schedule_length + 7 * res.mapping.ii
+    assert check_register_pressure(res.mapping) <= CGRA(2, 2).registers_per_pe
+
+
+def test_benchsuite_statistics_match_table3():
+    suite = load_suite()
+    assert len(suite) == 17
+    for name, (n, rec) in TABLE3_BENCHMARKS.items():
+        assert suite[name].num_nodes == n
+        assert suite[name].rec_ii() == rec
+
+
+@pytest.mark.parametrize("name", ["bitcount", "fft", "gsm", "lud", "susan"])
+@pytest.mark.parametrize("size", [2, 5, 10])
+def test_benchmarks_map_and_execute(name, size):
+    d = load_suite()[name]
+    res = map_dfg(d, CGRA(size, size), time_budget_s=30)
+    assert res.ok, f"{name}@{size}: {res.reason}"
+    assert res.mapping.ii >= res.stats.m_ii
+    check_equivalence(res.mapping, num_iters=4)
+
+
+@pytest.mark.skipif(not HAVE_Z3, reason="z3 unavailable")
+@pytest.mark.parametrize("name", ["bitcount", "fft"])
+def test_joint_baseline_agrees_on_ii(name):
+    """The decoupled mapper must not lose II quality vs the joint search
+    (paper: same II in 57/68; here we check small cases exactly)."""
+    d = load_suite()[name]
+    c = CGRA(3, 3)
+    ours = map_dfg(d, c, time_budget_s=60)
+    joint = map_dfg_joint(d, c, time_budget_s=120)
+    assert ours.ok and joint.ok
+    assert ours.mapping.validate() == []
+    assert joint.mapping.validate() == []
+    assert ours.mapping.ii <= joint.mapping.ii  # decoupling never worse here
+    check_equivalence(joint.mapping, num_iters=4)
+
+
+def test_mapping_pretty_and_kernel_table():
+    res = map_dfg(running_example(), CGRA(2, 2), time_budget_s=30)
+    table = res.mapping.kernel_table()
+    assert len(table) == 4
+    assert sum(len(r) for r in table) == 14
+    assert "II=4" in res.mapping.pretty()
+
+
+def test_register_pressure_aware_mapping():
+    """Paper §V-3 future-work extension: mappings must fit the register file
+    when max_register_pressure is given."""
+    from repro.core.simulate import check_register_pressure
+
+    d = load_suite()["fft"]
+    c = CGRA(3, 3)
+    res = map_dfg(d, c, time_budget_s=30, max_register_pressure=4)
+    assert res.ok
+    assert check_register_pressure(res.mapping) <= 4
+    check_equivalence(res.mapping, num_iters=4)

@@ -1,0 +1,208 @@
+"""Model-zoo tests: per-arch smoke (reduced configs), decode/prefill
+consistency, MoE/SSM unit behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, all_configs, get_config
+from repro.models import build_model, param_count
+from repro.models.api import MoESpec
+
+CONFIGS = all_configs()
+
+
+def _batch(cfg, b=2, s=24, seed=1):
+    rng = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(rng, (b, s + 1), 1, cfg.vocab)
+    out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.frontend == "audio":
+        out["frames"] = jnp.ones((b, cfg.frontend_len, cfg.d_model), jnp.float32) * 0.1
+    if cfg.frontend == "vision":
+        out["prefix_embeds"] = jnp.ones((b, cfg.frontend_len, cfg.d_model), jnp.float32) * 0.1
+    return out
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_forward_backward(name):
+    cfg = CONFIGS[name].reduced()
+    spec = build_model(cfg)
+    params = spec.init(jax.random.PRNGKey(0))
+    assert param_count(params) > 0
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(spec.loss_fn, has_aux=True)(
+        params, batch
+    )
+    assert jnp.isfinite(loss)
+    assert np.isfinite(
+        sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads))
+    )
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_decode(name):
+    cfg = CONFIGS[name].reduced()
+    spec = build_model(cfg)
+    params = spec.init(jax.random.PRNGKey(0))
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 1, cfg.vocab)
+    if cfg.family == "audio":
+        batch = {"frames": jnp.ones((b, cfg.frontend_len, cfg.d_model), jnp.float32),
+                 "tokens": toks}
+        logits, caches = spec.prefill(params, batch, 24)
+    else:
+        logits, caches = spec.prefill(params, toks, 24)
+    assert logits.shape == (b, cfg.vocab)
+    tok = jnp.argmax(logits, -1)[:, None]
+    base = s + cfg.num_meta_tokens + (cfg.frontend_len if cfg.family == "vlm" else 0)
+    for i in range(2):
+        logits, caches = spec.decode_step(params, tok, caches, jnp.int32(base + i))
+        assert logits.shape == (b, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits, -1)[:, None]
+
+
+@pytest.mark.parametrize("name", ["qwen3-0.6b", "gemma2-9b", "deepseek-v3-671b",
+                                  "xlstm-125m", "hymba-1.5b"])
+def test_decode_matches_teacher_forcing(name):
+    """Cache-based decode must reproduce the parallel forward's logits."""
+    cfg = CONFIGS[name].reduced()
+    spec = build_model(cfg)
+    params = spec.init(jax.random.PRNGKey(0))
+    b, s = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, s), 1, cfg.vocab)
+
+    # parallel logits over the prompt
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models.build import _unembed, lm_forward
+
+        x, _, _ = lm_forward(params, cfg, toks)
+        strip = x.shape[1] - s
+        full_logits = _unembed(params, cfg, x[:, strip:] if strip else x)
+    elif cfg.family == "ssm":
+        from repro.models.xlstm import _forward
+        from repro.models.layers import rms_norm
+
+        x, _ = _forward(params, cfg, toks)
+        full_logits = rms_norm(x, params["final_norm"]) @ params["lm_head"]
+    else:  # hybrid
+        from repro.models.hymba import _forward
+        from repro.models.layers import rms_norm
+
+        x, _ = _forward(params, cfg, toks)
+        x = x[:, cfg.num_meta_tokens:]
+        full_logits = rms_norm(x, params["final_norm"]) @ params["lm_head"]
+
+    # prefill on the first s-1 tokens, then decode token s-1
+    logits_pre, caches = spec.prefill(params, toks[:, : s - 1], s + 8)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre, np.float32),
+        np.asarray(full_logits[:, s - 2], np.float32),
+        atol=2e-3, rtol=2e-3,
+    )
+    pos = (s - 1) + cfg.num_meta_tokens
+    logits_dec, _ = spec.decode_step(params, toks[:, s - 1 :], caches, jnp.int32(pos))
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(full_logits[:, s - 1], np.float32),
+        atol=2e-3, rtol=2e-3,
+    )
+
+
+def test_moe_routing_topk_and_capacity():
+    from repro.models.moe import _dispatch_slots, _routing, moe_ffn, moe_init
+
+    cfg = CONFIGS["deepseek-moe-16b"].reduced()
+    params = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+    top_idx, gates, aux = _routing(params, x.reshape(-1, cfg.d_model), cfg)
+    assert top_idx.shape == (32, cfg.moe.top_k)
+    assert float(aux) >= 0
+    # slots: unique (expert, slot) pairs
+    slots, in_cap = _dispatch_slots(top_idx.reshape(-1), capacity=1000)
+    pairs = list(zip(np.asarray(top_idx).reshape(-1).tolist(), np.asarray(slots).tolist()))
+    assert len(set(pairs)) == len(pairs)
+    out, aux = moe_ffn(params, x, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_moe_capacity_drops_tokens():
+    """With a tiny capacity factor some tokens must be dropped (output changes
+    vs a generous capacity), while shapes stay fixed."""
+    import dataclasses
+
+    base = CONFIGS["deepseek-moe-16b"].reduced()
+    cfg_small = dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, capacity_factor=0.05)
+    )
+    cfg_big = dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, capacity_factor=8.0)
+    )
+    from repro.models.moe import moe_ffn, moe_init
+
+    params = moe_init(jax.random.PRNGKey(0), cfg_small, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, base.d_model), jnp.float32)
+    out_small, _ = moe_ffn(params, x, cfg_small)
+    out_big, _ = moe_ffn(params, x, cfg_big)
+    assert not np.allclose(np.asarray(out_small), np.asarray(out_big))
+
+
+def test_ssm_chunked_matches_sequential():
+    from repro.models.ssm import chunked_linear_recurrence, linear_recurrence_step
+
+    rng = np.random.default_rng(0)
+    b, h, t, dk, dv = 2, 3, 64, 8, 5
+    q = jnp.asarray(rng.standard_normal((b, h, t, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, t, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, t, dv)), jnp.float32)
+    log_a = jnp.asarray(-np.abs(rng.standard_normal((b, h, t))) * 0.1, jnp.float32)
+
+    y_chunk, state_chunk = chunked_linear_recurrence(q, k, v, log_a, chunk=16)
+    # sequential reference
+    state = jnp.zeros((b, h, dk, dv))
+    ys = []
+    for i in range(t):
+        y, state = linear_recurrence_step(
+            q[:, :, i], k[:, :, i], v[:, :, i], log_a[:, :, i], state
+        )
+        ys.append(y)
+    y_seq = jnp.stack(ys, axis=2)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state_chunk), np.asarray(state), atol=1e-4)
+
+
+def test_ssm_chunk_padding():
+    from repro.models.ssm import chunked_linear_recurrence
+
+    rng = np.random.default_rng(1)
+    b, h, t, dk, dv = 1, 2, 25, 4, 4  # 25 % 16 != 0: exercises padding
+    args = [
+        jnp.asarray(rng.standard_normal((b, h, t, dk)), jnp.float32),
+        jnp.asarray(rng.standard_normal((b, h, t, dk)), jnp.float32),
+        jnp.asarray(rng.standard_normal((b, h, t, dv)), jnp.float32),
+    ]
+    log_a = jnp.asarray(-np.abs(rng.standard_normal((b, h, t))) * 0.1, jnp.float32)
+    y16, s16 = chunked_linear_recurrence(*args, log_a, chunk=16)
+    y25, s25 = chunked_linear_recurrence(*args, log_a, chunk=25)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y25), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s16), np.asarray(s25), atol=1e-4)
+
+
+def test_gemma2_window_pattern():
+    from repro.models.build import layer_windows
+
+    cfg = CONFIGS["gemma2-9b"]
+    w = layer_windows(cfg, cfg.num_layers)
+    assert (w[0::2] == cfg.sliding_window).all()
+    assert (w[1::2] == 0).all()
+
+
+def test_hymba_window_pattern():
+    from repro.models.build import layer_windows
+
+    cfg = CONFIGS["hymba-1.5b"]
+    w = layer_windows(cfg, cfg.num_layers)
+    assert w[0] == 0 and w[cfg.num_layers // 2] == 0 and w[-1] == 0
+    assert (w != 0).sum() == cfg.num_layers - 3

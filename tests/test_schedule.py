@@ -1,0 +1,89 @@
+"""Schedule-layer tests: ASAP/ALAP/MobS/KMS against the paper's Tab. I/II."""
+
+import pytest
+
+from repro.core import CGRA, min_ii, rec_ii, res_ii, running_example
+from repro.core.schedule import (
+    KMS, alap_schedule, asap_schedule, mobility_schedule, modulo_windows,
+)
+
+# Tab. I rows (paper)
+ASAP_ROWS = {0: {0, 1, 2, 3, 4}, 1: {5, 11}, 2: {6, 12}, 3: {7, 8, 13}, 4: {9}, 5: {10}}
+ALAP_ROWS = {0: {4}, 1: {3, 5}, 2: {0, 2, 6}, 3: {1, 8, 11}, 4: {7, 9, 12}, 5: {10, 13}}
+MOBS_ROWS = {
+    0: {0, 1, 2, 3, 4},
+    1: {0, 1, 2, 3, 5, 11},
+    2: {0, 1, 2, 6, 11, 12},
+    3: {1, 7, 8, 11, 12, 13},
+    4: {7, 9, 12, 13},
+    5: {10, 13},
+}
+
+
+def rows_of(schedule):
+    out = {}
+    for v, t in enumerate(schedule):
+        out.setdefault(t, set()).add(v)
+    return out
+
+
+def test_asap_matches_paper_table1():
+    assert rows_of(asap_schedule(running_example())) == ASAP_ROWS
+
+
+def test_alap_matches_paper_table1():
+    assert rows_of(alap_schedule(running_example())) == ALAP_ROWS
+
+
+def test_mobs_matches_paper_table1():
+    mobs = mobility_schedule(running_example())
+    got = {t: set(row) for t, row in enumerate(mobs.rows())}
+    assert got == MOBS_ROWS
+
+
+def test_mii_matches_paper_running_example():
+    d = running_example()
+    c = CGRA(2, 2)
+    assert res_ii(d, c) == 4          # ceil(14/4)
+    assert rec_ii(d) == 4
+    assert min_ii(d, c) == 4
+
+
+def test_kms_folding_covers_mobs():
+    """KMS = MobS folded by II (paper's Tab. II up to kernel-row rotation)."""
+    d = running_example()
+    kms = KMS(mobility_schedule(d), 4)
+    assert kms.num_folds == 2          # ceil(6/4), paper: 2 interleaved iters
+    rows = kms.rows()
+    assert len(rows) == 4
+    # every MobS entry appears exactly once with the right fold
+    seen = set()
+    for kt, row in enumerate(rows):
+        for v, fold in row:
+            t_abs = fold * 4 + kt
+            assert kms.mobs.asap[v] <= t_abs <= kms.mobs.alap[v]
+            seen.add((v, t_abs))
+    total = sum(m.alap[v] - m.asap[v] + 1 for m in [kms.mobs] for v in range(14))
+    assert len(seen) == total
+
+
+def test_connectivity_degree():
+    assert CGRA(2, 2).connectivity_degree == 3    # paper §IV-B3
+    assert CGRA(3, 3).connectivity_degree == 5
+    assert CGRA(20, 20).connectivity_degree == 5
+
+
+def test_modulo_windows_tighten_and_detect_infeasible():
+    d = running_example()
+    asap = asap_schedule(d)
+    horizon = max(asap)
+    # II = RecII is feasible
+    assert modulo_windows(d, 4, horizon) is not None
+    # II below RecII must be reported infeasible
+    assert modulo_windows(d, 3, horizon) is None
+    # windows never widen beyond the DAG windows
+    a2, l2 = modulo_windows(d, 4, horizon)
+    alap = alap_schedule(d, horizon)
+    for v in d.nodes:
+        assert a2[v] >= asap[v]
+        assert l2[v] <= alap[v]

@@ -1,0 +1,120 @@
+"""Time-solver and monomorphism-search tests, including the executable
+refutation of the published constraint-sufficiency claim (DESIGN.md §7)."""
+
+import pytest
+
+from repro.core import CGRA, DFG, Edge, running_example
+from repro.core.mono import SpaceStats, check_monomorphism, find_monomorphism
+from repro.core.time_smt import HAVE_Z3, TimeSolver, check_time_solution
+
+
+@pytest.mark.parametrize("backend", ["z3", "python"] if HAVE_Z3 else ["python"])
+def test_time_solution_satisfies_all_constraints(backend):
+    d = running_example()
+    c = CGRA(2, 2)
+    solver = TimeSolver(d, c, 4, backend=backend, timeout_s=30)
+    sol = solver.next_solution()
+    assert sol is not None
+    assert check_time_solution(d, c, sol, connectivity="strict") == []
+
+
+@pytest.mark.skipif(not HAVE_Z3, reason="z3 unavailable")
+def test_backends_agree_on_feasibility():
+    d = running_example()
+    c = CGRA(2, 2)
+    # II=4 feasible on both; II=3 infeasible (below RecII) on both
+    assert TimeSolver(d, c, 4, backend="z3").next_solution() is not None
+    assert TimeSolver(d, c, 4, backend="python").next_solution() is not None
+    for backend in ("z3", "python"):
+        with pytest.raises(ValueError):
+            TimeSolver(d, c, 3, backend=backend)
+
+
+def test_enumeration_blocks_previous_label_partitions():
+    d = running_example()
+    c = CGRA(2, 2)
+    solver = TimeSolver(d, c, 4, timeout_s=30)
+    seen = set()
+    for _ in range(5):
+        sol = solver.next_solution()
+        if sol is None:
+            break
+        key = tuple(sol.labels)
+        assert key not in seen, "same label partition enumerated twice"
+        seen.add(key)
+    assert len(seen) >= 2
+
+
+def test_monomorphism_found_and_valid():
+    d = running_example()
+    c = CGRA(2, 2)
+    sol = TimeSolver(d, c, 4, timeout_s=30).next_solution()
+    space = find_monomorphism(d, c, sol.labels, 4)
+    assert space is not None
+    assert check_monomorphism(d, c, sol.labels, space.placement, 4) == []
+
+
+def test_check_monomorphism_detects_violations():
+    d = DFG.from_edge_list(3, [(0, 1), (1, 2)], ops=["input", "mov", "store"])
+    c = CGRA(2, 2)
+    labels = [0, 1, 2]
+    # mono1 violation: two nodes on same (pe, step)
+    errs = check_monomorphism(d, c, [0, 0, 1], [1, 1, 1], 2)
+    assert any("mono1" in e for e in errs)
+    # mono3 violation: adjacent nodes on non-adjacent PEs (0 and 3 diagonal)
+    errs = check_monomorphism(d, c, labels, [0, 3, 3], 3)
+    assert any("mono3" in e for e in errs)
+
+
+# ----------------------------------------------------------------------
+# The paper's §IV-D proof claims capacity+connectivity guarantee a
+# monomorphism. Counterexample: a same-step star v-{a,b,c} on a 2x2 CGRA
+# satisfies the published constraints (|S_v| = 3 <= D_M = 3, capacity 4 <= 4)
+# but cannot embed: a,b,c need distinct PEs in v's OPEN neighbourhood (size
+# 2). Our "strict" mode closes this gap; "paper" mode reproduces it.
+# ----------------------------------------------------------------------
+
+def _star_dfg():
+    # carried edges (distance 1) let all four nodes share a kernel step at II=1
+    return DFG(
+        num_nodes=4,
+        edges=[Edge(0, 1, 1), Edge(0, 2, 1), Edge(0, 3, 1)],
+        ops=["input", "phi", "phi", "phi"],
+        name="same_step_star",
+    )
+
+
+def test_published_constraints_are_not_sufficient():
+    d = _star_dfg()
+    c = CGRA(2, 2)
+    from repro.core.time_smt import TimeSolution
+
+    sol = TimeSolution(1, [0, 0, 0, 0])
+    # satisfies every published constraint...
+    assert check_time_solution(d, c, sol, connectivity="paper") == []
+    # ...but no monomorphism exists (exhaustive: 4 nodes x 4 PEs)
+    assert find_monomorphism(d, c, sol.labels, 1, timeout_s=10) is None
+
+
+def test_strict_mode_rejects_the_counterexample():
+    d = _star_dfg()
+    c = CGRA(2, 2)
+    from repro.core.time_smt import TimeSolution
+
+    sol = TimeSolution(1, [0, 0, 0, 0])
+    errs = check_time_solution(d, c, sol, connectivity="strict")
+    assert errs, "strict connectivity must reject the same-step star"
+
+
+def test_triangle_partitions_rejected_by_strict_solver():
+    # triangle via carried edges, II=1: mesh is bipartite => unembeddable
+    d = DFG(
+        num_nodes=3,
+        edges=[Edge(0, 1, 1), Edge(1, 2, 1), Edge(0, 2, 1)],
+        ops=["input", "phi", "phi"],
+        name="triangle",
+    )
+    c = CGRA(4, 4)
+    solver = TimeSolver(d, c, 1, connectivity="strict", timeout_s=10)
+    sol = solver.next_solution()
+    assert sol is None, "strict solver must refuse mono-chromatic triangles"
