@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core.baseline import map_dfg_joint
+from repro.core.baseline import HAVE_Z3, map_dfg_joint
 from repro.core.benchsuite import load_suite
 from repro.core.cgra import CGRA
 from repro.core.mapper import map_dfg
@@ -29,6 +29,7 @@ def run(
     suite = load_suite()
     if benchmarks:
         suite = {k: v for k, v in suite.items() if k in benchmarks}
+    run_joint = run_joint and HAVE_Z3   # graceful skip, same as bench_fig5
     rows = []
     for size in sizes:
         cgra = CGRA(size, size)

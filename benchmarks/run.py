@@ -4,8 +4,12 @@
   fig5     — compile time vs CGRA size for `aes` (paper Fig. 5)
   kernels  — Pallas kernel micro-benchmarks
 
-Prints ``name,us_per_call,derived`` CSV at the end. Full sweep:
-``PYTHONPATH=src python -m benchmarks.run``; quick subset with ``--quick``.
+Each section also emits a ``BENCH_<name>.json`` artifact (consumed by CI and
+by the Fig. 5 near-flat acceptance gate) and prints a
+``name,us_per_call,derived`` CSV at the end.
+
+Full sweep: ``PYTHONPATH=src python -m benchmarks.run``
+CI smoke:   ``PYTHONPATH=src python -m benchmarks.run --smoke``
 """
 
 from __future__ import annotations
@@ -18,9 +22,16 @@ import sys
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small subset, short timeouts")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI job: quick subset, no joint baseline, JSON artifacts only",
+    )
     ap.add_argument("--skip-joint", action="store_true")
     ap.add_argument("--only", choices=["table3", "fig5", "kernels"])
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.quick = True
+        args.skip_joint = True
 
     from benchmarks import bench_fig5, bench_kernels, bench_table3
 
@@ -36,6 +47,8 @@ def main(argv=None) -> None:
         rows = bench_table3.run(**kw)
         for line in bench_table3.summarize(rows):
             print("TABLE3:", line)
+        with open("BENCH_table3.json", "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
         for r in rows:
             csv_rows.append(
                 (
@@ -46,7 +59,8 @@ def main(argv=None) -> None:
             )
 
     if args.only in (None, "fig5"):
-        sizes = (2, 5, 10) if args.quick else (2, 4, 6, 8, 10, 14, 20)
+        # always span 4x4..20x20: the near-flat gate compares those endpoints
+        sizes = (4, 10, 20) if args.quick else (2, 4, 6, 8, 10, 14, 20)
         rows = bench_fig5.run(sizes=sizes, run_joint=not args.skip_joint,
                               joint_budget_s=20 if args.quick else 60)
         for r in rows:
@@ -59,7 +73,10 @@ def main(argv=None) -> None:
             )
 
     if args.only in (None, "kernels"):
-        for r in bench_kernels.run():
+        krows = bench_kernels.run()
+        with open("BENCH_kernels.json", "w") as f:
+            json.dump({"rows": krows}, f, indent=2)
+        for r in krows:
             csv_rows.append((r["name"], r["us_per_call"], r["derived"]))
 
     print("\nname,us_per_call,derived")

@@ -1,0 +1,40 @@
+"""Version-compatibility shims for the pinned accelerator stack.
+
+The repo targets the jax API surface of >= 0.5 (``jax.shard_map`` at top
+level) while the baked-in container toolchain pins jax 0.4.x, where the same
+callable lives at ``jax.experimental.shard_map.shard_map``. Import the shim
+instead of reaching into ``jax`` directly:
+
+    from repro.compat import shard_map
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _resolve_shard_map():
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:  # jax >= 0.5: promoted to the top-level namespace
+        return sm
+    from jax.experimental.shard_map import shard_map as sm  # jax 0.4.x
+
+    return sm
+
+
+shard_map = _resolve_shard_map()
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` (jax >= 0.5) for 0.4.x mapped contexts.
+
+    ``psum(1, axis)`` constant-folds to a Python int under shard_map tracing,
+    which is exactly what ``jax.lax.axis_size`` returns on newer jax.
+    """
+    sz = getattr(jax.lax, "axis_size", None)
+    if sz is not None:
+        return sz(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+__all__ = ["shard_map", "axis_size"]

@@ -22,7 +22,12 @@ from .schedule import (
     rec_ii,
     res_ii,
 )
-from .time_smt import TimeSolution, TimeSolver, check_time_solution
+from .time_smt import (
+    TimeSolution,
+    TimeSolver,
+    available_backends,
+    check_time_solution,
+)
 
 __all__ = [
     "CGRA", "MRRG", "DFG", "Edge", "running_example",
@@ -30,5 +35,5 @@ __all__ = [
     "check_monomorphism", "find_monomorphism",
     "KMS", "MobilitySchedule", "alap_schedule", "asap_schedule",
     "min_ii", "mobility_schedule", "rec_ii", "res_ii",
-    "TimeSolution", "TimeSolver", "check_time_solution",
+    "TimeSolution", "TimeSolver", "check_time_solution", "available_backends",
 ]

@@ -24,16 +24,9 @@ from dataclasses import dataclass
 
 from .cgra import CGRA
 from .dfg import DFG
-from .mapper import Mapping, MapResult, MapperStats
+from .mapper import Mapping, MapResult, MapperStats, ii_slack_windows
 from .schedule import asap_schedule, min_ii, modulo_windows, rec_ii, res_ii
-
-try:  # pragma: no cover
-    import z3  # type: ignore
-
-    HAVE_Z3 = True
-except Exception:  # pragma: no cover
-    z3 = None
-    HAVE_Z3 = False
+from .time_backends.z3_backend import HAVE_Z3, z3
 
 
 def map_dfg_joint(
@@ -56,20 +49,22 @@ def map_dfg_joint(
     deadline = start + time_budget_s
     hi = max_ii if max_ii is not None else max(stats.m_ii * 4, stats.m_ii + 8)
 
-    for ii in range(stats.m_ii, hi + 1):
-        for slack in range(0, max_slack + 1):
-            remaining = deadline - _time.perf_counter()
-            if remaining <= 0:
-                stats.total_s = _time.perf_counter() - start
-                return MapResult(None, stats, reason="time budget exhausted")
-            mapping = _solve_joint(dfg, cgra, ii, slack, remaining, stats)
-            if mapping is not None:
-                stats.final_ii = ii
-                stats.total_s = _time.perf_counter() - start
-                errs = mapping.validate()
-                if errs:
-                    raise AssertionError(f"joint mapper invalid mapping: {errs}")
-                return MapResult(mapping, stats)
+    # Same canonical window order as the decoupled mapper's portfolio, so
+    # compile-time comparisons stay apples-to-apples; the joint encoding is
+    # too monolithic to interleave budgets, which is exactly its problem.
+    for ii, slack in ii_slack_windows(stats.m_ii, hi, max_slack):
+        remaining = deadline - _time.perf_counter()
+        if remaining <= 0:
+            stats.total_s = _time.perf_counter() - start
+            return MapResult(None, stats, reason="time budget exhausted")
+        mapping = _solve_joint(dfg, cgra, ii, slack, remaining, stats)
+        if mapping is not None:
+            stats.final_ii = ii
+            stats.total_s = _time.perf_counter() - start
+            errs = mapping.validate()
+            if errs:
+                raise AssertionError(f"joint mapper invalid mapping: {errs}")
+            return MapResult(mapping, stats)
     stats.total_s = _time.perf_counter() - start
     return MapResult(None, stats, reason=f"no mapping up to II={hi}")
 

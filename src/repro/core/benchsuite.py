@@ -18,6 +18,7 @@ RecII match) at construction. Real DFGs can be swapped in via DFG.from_json.
 from __future__ import annotations
 
 import random
+import zlib
 
 from .dfg import DFG, Edge
 
@@ -50,7 +51,9 @@ def make_benchmark_dfg(name: str, num_nodes: int, rec: int, *, seed: int | None 
     """Deterministic loop-body-shaped DFG with the requested statistics."""
     if rec < 1 or num_nodes < rec + 2:
         raise ValueError(f"{name}: need at least rec+2={rec + 2} nodes")
-    rng = random.Random(seed if seed is not None else hash(name) % (2**32))
+    # crc32, NOT hash(): str hashing is salted per process (PYTHONHASHSEED),
+    # which silently made "deterministic" DFGs differ between test runs
+    rng = random.Random(seed if seed is not None else zlib.crc32(name.encode()))
 
     ops: list[str] = []
     edges: list[Edge] = []

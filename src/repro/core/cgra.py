@@ -70,6 +70,23 @@ class CGRA:
                 adj[pe][nb] = True
         return tuple(tuple(row) for row in adj)
 
+    @cached_property
+    def closed_masks(self) -> tuple[int, ...]:
+        """Closed neighbourhood of each PE as a bitmask (bit p = PE p).
+
+        The layout contract shared with core/mono.py (DESIGN.md §5): PE p is
+        bit ``1 << p``, so candidate-set intersection, occupancy tests and
+        free-slot counting are word-level AND/ANDN/popcount instead of
+        per-element Python set operations.
+        """
+        out: list[int] = []
+        for pe in range(self.num_pes):
+            m = 1 << pe
+            for nb in self.neighbors[pe]:
+                m |= 1 << nb
+            out.append(m)
+        return tuple(out)
+
     @property
     def connectivity_degree(self) -> int:
         """Paper's D_M: max closed neighbourhood size (self + mesh neighbours).

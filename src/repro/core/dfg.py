@@ -184,6 +184,26 @@ class DFG:
                 return False
         return True
 
+    def stable_hash(self) -> str:
+        """Content hash over the mapping-relevant structure (nodes + edges).
+
+        Used as the mapping-cache key (core/mapper.py): two DFGs with the same
+        hash admit exactly the same space-time mappings. ``imms``/``name`` are
+        excluded — they do not affect mapping feasibility.
+        """
+        import hashlib
+
+        payload = json.dumps(
+            {
+                "n": self.num_nodes,
+                "ops": self.ops,
+                "edges": sorted((e.src, e.dst, e.distance) for e in self.edges),
+            },
+            sort_keys=True,
+            separators=(",", ":"),
+        )
+        return hashlib.sha1(payload.encode()).hexdigest()
+
     # ------------------------------------------------------------------- I/O
     def to_json(self) -> str:
         return json.dumps(

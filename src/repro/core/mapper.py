@@ -1,23 +1,38 @@
-"""End-to-end space/time-decoupled CGRA mapper (paper §IV).
+"""End-to-end space/time-decoupled CGRA mapper (paper §IV) with a portfolio
+search layer (DESIGN.md §6).
 
 Pipeline per II (starting at mII = max(ResII, RecII)):
 
-  1. TIME  — SMT search over the KMS window for a schedule satisfying the
+  1. TIME  — backend search over the KMS window for a schedule satisfying the
      modulo-scheduling + capacity + connectivity constraints (time_smt.py).
   2. SPACE — monomorphism search embedding the labelled DFG into the MRRG
      (mono.py).
   3. If the space search fails (possible: the published constraints are
      necessary but not sufficient, see DESIGN.md §7), the time solution is
-     excluded with a blocking clause and step 1 re-runs — a completeness
-     backstop the paper does not need in 67/68 cases and we rarely hit.
+     excluded — the incremental backends never re-propose a label partition —
+     and step 1 re-runs.
 
-If no (time, space) pair exists within the II's KMS window, the window is
-relaxed (schedule-length slack) and finally II is incremented.
+The portfolio layer replaces the old strictly-sequential (II, slack) sweep:
+all candidate windows are visited in rounds of geometrically growing budgets
+(time-solver steps, space-search nodes, restarts). Round r spends little
+enough per window that infeasible low IIs cannot starve feasible higher ones
+— the failure mode that made 20x20 grids take tens of seconds — while windows
+that merely need a deeper dive get it on the next round, preserving the
+smallest-II-first quality preference. Time solutions whose partitions failed
+to embed are kept and retried with bigger space budgets/new seeds in later
+rounds before fresh partitions are enumerated (time work is never repeated),
+and finished mappings land in a small LRU cache keyed on (DFG content hash,
+CGRA dims, II) so repeated compilations of the same kernel are free.
+
+``deterministic=True`` replaces every wall-clock budget with visited-node /
+solver-step budgets: identical inputs then take the identical search path
+regardless of machine load (used by tests; see DESIGN.md §6.3).
 """
 
 from __future__ import annotations
 
 import time as _time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from .cgra import CGRA
@@ -99,6 +114,9 @@ class MapperStats:
     res_ii: int = -1
     rec_ii: int = -1
     backend: str = ""
+    rounds: int = 0
+    cache_hit: bool = False
+    space_nodes_visited: int = 0
 
 
 @dataclass
@@ -110,6 +128,61 @@ class MapResult:
     @property
     def ok(self) -> bool:
         return self.mapping is not None
+
+
+# --------------------------------------------------------------- LRU cache
+
+# (dfg_hash, rows, cols, topology, connectivity, max_rp, ii) -> (t_abs, placement)
+_MAP_CACHE: OrderedDict[tuple, tuple[list[int], list[int]]] = OrderedDict()
+_MAP_CACHE_MAX = 128
+
+
+def clear_mapping_cache() -> None:
+    _MAP_CACHE.clear()
+
+
+def _cache_base_key(dfg, cgra, connectivity, max_rp) -> tuple:
+    return (
+        dfg.stable_hash(), cgra.rows, cgra.cols, cgra.topology,
+        connectivity, max_rp,
+    )
+
+
+def _cache_put(base_key: tuple, mapping: Mapping) -> None:
+    key = (*base_key, mapping.ii)
+    _MAP_CACHE[key] = (list(mapping.t_abs), list(mapping.placement))
+    _MAP_CACHE.move_to_end(key)
+    while len(_MAP_CACHE) > _MAP_CACHE_MAX:
+        _MAP_CACHE.popitem(last=False)
+
+
+def _cache_get(base_key: tuple, lo_ii: int, hi_ii: int) -> tuple[int, list[int], list[int]] | None:
+    for ii in range(lo_ii, hi_ii + 1):
+        key = (*base_key, ii)
+        hit = _MAP_CACHE.get(key)
+        if hit is not None:
+            _MAP_CACHE.move_to_end(key)
+            return ii, list(hit[0]), list(hit[1])
+    return None
+
+
+# ---------------------------------------------------------------- portfolio
+
+@dataclass
+class _Window:
+    ii: int
+    slack: int
+    solver: TimeSolver | None = None
+    infeasible: bool = False              # precheck ValueError: never opens
+    yielded_any: bool = False             # produced >= 1 time solution ever
+    pending: list[TimeSolution] = field(default_factory=list)  # space-failed
+
+
+def ii_slack_windows(lo_ii: int, hi_ii: int, max_slack: int):
+    """Canonical (II, slack) window order shared with the joint baseline."""
+    for ii in range(lo_ii, hi_ii + 1):
+        for slack in range(0, max_slack + 1):
+            yield ii, slack
 
 
 def map_dfg(
@@ -125,91 +198,277 @@ def map_dfg(
     max_retries_per_window: int = 8,
     window_timeout_s: float = 10.0,
     max_register_pressure: int | None = None,
+    deterministic: bool = False,
+    use_cache: bool = True,
+    seed: int = 0,
 ) -> MapResult:
     """Map `dfg` onto `cgra` with the decoupled pipeline.
 
     ``max_register_pressure`` enables register-file-aware mapping — the
     restriction the paper's §V-3 leaves to future work: mappings whose
     steady-state per-PE live-value count exceeds the budget are rejected and
-    the search continues (blocking clause + retry), so accepted mappings are
-    guaranteed to fit the register files.
+    the search continues, so accepted mappings are guaranteed to fit the
+    register files.
+
+    ``deterministic=True`` swaps every wall-clock limit for node/step budgets
+    so results are load-independent and reproducible; ``time_budget_s`` /
+    ``space_timeout_s`` / ``window_timeout_s`` are then ignored, the mapping
+    cache is bypassed (process history must not leak into results), and the
+    backend must be (or ``"auto"``-resolve to) the cp backend — z3 cannot
+    honor step budgets.
     """
     dfg.validate()
+    if deterministic:
+        # the bounded/reproducible contract only holds on the cp backend (z3
+        # cannot honor step budgets), and only when process history cannot
+        # leak in through the mapping cache
+        if backend == "auto":
+            backend = "cp"
+        elif backend == "z3":
+            raise ValueError(
+                "deterministic=True requires the cp backend: z3 solves are "
+                "wall-clock-bounded and load-dependent"
+            )
+        use_cache = False
     stats = MapperStats()
     stats.res_ii = res_ii(dfg, cgra)
     stats.rec_ii = rec_ii(dfg)
     stats.m_ii = min_ii(dfg, cgra)
     start = _time.perf_counter()
-    deadline = start + time_budget_s
+    deadline = None if deterministic else start + time_budget_s
     hi = max_ii if max_ii is not None else max(stats.m_ii * 4, stats.m_ii + 8)
 
-    for ii in range(stats.m_ii, hi + 1):
-        for slack in range(0, max_slack + 1):
-            if _time.perf_counter() > deadline:
+    base_key = None
+    if use_cache:
+        base_key = _cache_base_key(dfg, cgra, connectivity, max_register_pressure)
+        hit = _cache_get(base_key, stats.m_ii, hi)
+        if hit is not None:
+            ii, t_abs, placement = hit
+            mapping = Mapping(dfg=dfg, cgra=cgra, ii=ii, t_abs=t_abs,
+                              placement=placement)
+            if not mapping.validate():
+                stats.cache_hit = True
+                stats.final_ii = ii
+                stats.backend = "cache"
                 stats.total_s = _time.perf_counter() - start
-                return MapResult(None, stats, reason="time budget exhausted")
-            window_had_time_solution = False
-            try:
-                solver = TimeSolver(
-                    dfg, cgra, ii,
-                    extra_slack=slack,
-                    connectivity=connectivity,
-                    backend=backend,
-                    timeout_s=max(
-                        0.1, min(window_timeout_s, deadline - _time.perf_counter())
-                    ),
-                    seed=ii * 31 + slack,
+                return MapResult(mapping, stats)
+
+    windows = [_Window(ii, s) for ii, s in ii_slack_windows(stats.m_ii, hi, max_slack)]
+    # deterministic mode has no wall-clock backstop: cap the per-round node
+    # budgets so total work is bounded by rounds x windows x node caps
+    det_space_cap = 400_000
+    det_cp_cap = 400_000
+    max_rounds = 6 if deterministic else 16
+    # anytime polish: extra rounds on lower-II windows; wall-capped when not
+    # deterministic, round-capped when it is
+    improve_rounds = 3 if deterministic else 8
+    solvers: list[TimeSolver] = []
+    best: Mapping | None = None
+    polish_left = 0
+
+    def out_of_time() -> bool:
+        return deadline is not None and _time.perf_counter() > deadline
+
+    def finish(mapping: Mapping | None, reason: str = "") -> MapResult:
+        stats.time_phase_s += sum(s.stats.solver_time_s for s in solvers)
+        stats.total_s = _time.perf_counter() - start
+        if mapping is not None:
+            errs = mapping.validate()
+            if errs:  # defensive: should be impossible
+                raise AssertionError(f"mapper produced invalid mapping: {errs}")
+            stats.final_ii = mapping.ii
+            if use_cache:
+                _cache_put(base_key, mapping)
+        return MapResult(mapping, stats, reason=reason)
+
+    def try_space(
+        sol: TimeSolution, w: _Window, rnd: int,
+        node_budget: int, restarts: int, salt: int = 0,
+    ) -> Mapping | None:
+        sstats = SpaceStats()
+        if deterministic:
+            timeout = None
+        elif best is not None:      # polish dive: deep per-call wall cap
+            timeout = max(2.5, space_timeout_s)
+        else:
+            timeout = space_timeout_s * (1 + rnd)
+        space = find_monomorphism(
+            dfg, cgra, sol.labels, w.ii,
+            timeout_s=timeout,
+            node_budget=node_budget,
+            restarts=restarts,
+            seed=seed * 8191 + rnd * 127 + w.slack * 17 + salt,
+            stats=sstats,
+        )
+        stats.space_phase_s += sstats.search_time_s
+        stats.space_nodes_visited += sstats.nodes_visited
+        if space is None:
+            stats.mono_failures += 1
+            return None
+        mapping = Mapping(
+            dfg=dfg, cgra=cgra, ii=w.ii,
+            t_abs=sol.t_abs, placement=space.placement,
+        )
+        if max_register_pressure is not None:
+            from .simulate import check_register_pressure
+
+            if check_register_pressure(mapping) > max_register_pressure:
+                # paper §V-3 extension: before rejecting, re-realize the same
+                # partition with compacted lifetimes (same labels => the found
+                # placement stays valid) — usually enough to fit the budget
+                compact = w.solver.realize_compact(sol)
+                mapping = Mapping(
+                    dfg=dfg, cgra=cgra, ii=w.ii,
+                    t_abs=compact.t_abs, placement=space.placement,
                 )
-            except ValueError:
-                continue  # infeasible window (horizon < critical path)
-            stats.backend = solver.stats.backend
-            retries = 0
-            while retries < max_retries_per_window:
-                sol = solver.next_solution()
-                stats.time_phase_s = max(stats.time_phase_s, 0.0)
+                if check_register_pressure(mapping) > max_register_pressure:
+                    # a different placement of the same partition may still
+                    # fit: the solution stays pending rather than blocked
+                    stats.mono_failures += 1
+                    return None
+        return mapping
+
+    polish_deadline: float | None = None
+
+    def record(mapping: Mapping) -> None:
+        """Anytime improvement: keep the best (lowest-II) mapping, restrict
+        the remaining search to strictly lower IIs, grant polish rounds."""
+        nonlocal best, polish_left, windows, deadline, polish_deadline
+        if best is None or mapping.ii < best.ii:
+            best = mapping
+        polish_left = improve_rounds
+        windows = [w for w in windows if w.ii < best.ii]
+        if not deterministic and polish_deadline is None:
+            # polish is bounded: a few multiples of the time-to-first-mapping,
+            # never the whole remaining budget
+            elapsed = _time.perf_counter() - start
+            polish_s = max(5.0, min(20.0, 4 * elapsed, 0.25 * time_budget_s))
+            polish_deadline = _time.perf_counter() + polish_s
+            deadline = min(deadline, polish_deadline)
+
+    rnd = 0
+    while rnd < max_rounds:
+        stats.rounds = rnd + 1
+        if best is not None:
+            if polish_left <= 0 or not windows:
+                return finish(best)
+            polish_left -= 1
+        # geometric budgets: cheap sweep first, deep dives on revisit; once an
+        # incumbent exists, polish dives go straight to the deep end — the
+        # polish deadline (or round cap) is the limiter, not the schedule
+        space_cap = det_space_cap if deterministic else 4_000_000
+        if best is None:
+            space_nodes = min(15_000 * 8**rnd, space_cap)
+            restarts = min(4 + 2 * rnd, 12)
+        else:
+            space_nodes = space_cap if not deterministic else min(15_000 * 8**rnd, space_cap)
+            restarts = 10
+        cp_steps = min(20_000 * 4**rnd, det_cp_cap if deterministic else 2_000_000)
+        # fresh partitions get a cheap screen (embeddable ones usually embed
+        # within a few k nodes); the deep budget goes to a rotating window of
+        # pending partitions — many cheap probes beat few deep dives
+        new_sols = min(4 + 4 * rnd, 4 * max(2, max_retries_per_window))
+        screen_nodes = min(space_nodes, 25_000)
+        screen_restarts = min(restarts, 4)
+        deep_k = 4
+        progress = False
+
+        ii_seen_solution: set[int] = set()
+        sweep = windows
+        if best is not None:
+            # polish: the II closest below the incumbent is the most likely
+            # to embed — improve stepwise instead of sinking the polish
+            # budget into (possibly space-infeasible) minimum-II windows
+            sweep = sorted(windows, key=lambda x: (-x.ii, x.slack))
+        for w in sweep:
+            if w.infeasible:
+                continue
+            if out_of_time():
+                return finish(best, "" if best else "time budget exhausted")
+            # Deeper-slack windows mostly re-enumerate equivalent partitions —
+            # only open slack s+1 once every shallower window of this II is
+            # exhausted without ever yielding a time solution (matches the
+            # old sweep's II-escalation behaviour).
+            if w.slack > 0:
+                shallower = [
+                    x for x in windows if x.ii == w.ii and x.slack < w.slack
+                ]
+                if any(
+                    not x.infeasible
+                    and (x.yielded_any or x.solver is None or not x.solver.exhausted)
+                    for x in shallower
+                ):
+                    continue
+            if w.solver is None:
+                try:
+                    w.solver = TimeSolver(
+                        dfg, cgra, w.ii,
+                        extra_slack=w.slack,
+                        connectivity=connectivity,
+                        backend=backend,
+                        timeout_s=None,
+                        # seed 0 keeps the CP value order greedy (earliest-
+                        # first), so each window's FIRST partition matches the
+                        # classic modulo-scheduling packing; diversity comes
+                        # from enumeration, not from scrambling the first shot
+                        seed=seed * 31,
+                    )
+                except ValueError:
+                    w.infeasible = True  # window can't hold the critical path
+                    continue
+                solvers.append(w.solver)
+                stats.backend = w.solver.stats.backend
+            # 1) retry cached partitions with this round's bigger space budget
+            if rnd > 0 and w.pending:
+                mapping = None
+                for i in range(min(deep_k, len(w.pending))):
+                    sol = w.pending.pop(0)
+                    mapping = try_space(sol, w, rnd, space_nodes, restarts, salt=i)
+                    if mapping is not None:
+                        record(mapping)
+                        break
+                    w.pending.append(sol)   # back of the rotation queue
+                    if out_of_time():
+                        return finish(best, "" if best else "time budget exhausted")
+                if not windows:   # record() trimmed everything below best away
+                    return finish(best)
+                if mapping is not None:
+                    break  # windows trimmed: restart the sweep on lower IIs
+                progress = True
+            # 2) enumerate fresh partitions (bounded per round)
+            if w.solver.exhausted or w.ii in ii_seen_solution:
+                continue
+            found = None
+            for _ in range(new_sols):
+                if out_of_time():
+                    return finish(best, "" if best else "time budget exhausted")
+                call_deadline = None
+                if not deterministic:
+                    call_deadline = min(
+                        _time.perf_counter() + window_timeout_s, deadline
+                    )
+                sol = w.solver.next_solution(
+                    deadline=call_deadline, step_budget=cp_steps
+                )
                 if sol is None:
                     break
-                window_had_time_solution = True
+                w.yielded_any = True
+                ii_seen_solution.add(w.ii)
                 stats.time_solutions_tried += 1
-                sstats = SpaceStats()
-                space = find_monomorphism(
-                    dfg, cgra, sol.labels, ii,
-                    timeout_s=space_timeout_s, stats=sstats,
-                    restarts=4, seed=retries,
-                )
-                stats.space_phase_s += sstats.search_time_s
-                if space is not None:
-                    mapping = Mapping(
-                        dfg=dfg, cgra=cgra, ii=ii,
-                        t_abs=sol.t_abs, placement=space.placement,
-                    )
-                    if max_register_pressure is not None:
-                        from .simulate import check_register_pressure
-
-                        pressure = check_register_pressure(mapping)
-                        if pressure > max_register_pressure:
-                            # paper §V-3 extension: reject and keep searching
-                            stats.mono_failures += 1
-                            retries += 1
-                            continue
-                    stats.time_phase_s += solver.stats.solver_time_s
-                    stats.final_ii = ii
-                    stats.total_s = _time.perf_counter() - start
-                    errs = mapping.validate()
-                    if errs:  # defensive: should be impossible
-                        raise AssertionError(
-                            f"mapper produced invalid mapping: {errs}"
-                        )
-                    return MapResult(mapping, stats)
-                stats.mono_failures += 1
-                retries += 1
-                if _time.perf_counter() > deadline:
+                progress = True
+                found = try_space(sol, w, rnd, screen_nodes, screen_restarts)
+                if found is not None:
+                    record(found)
                     break
-            stats.time_phase_s += solver.stats.solver_time_s
-            if window_had_time_solution:
-                # Time solutions exist but none embedded: wider windows mostly
-                # re-enumerate equivalent partitions — escalate II instead
-                # (matches the paper's II-inflation behaviour on hard cases).
-                break
-    stats.total_s = _time.perf_counter() - start
-    return MapResult(None, stats, reason=f"no mapping up to II={hi}")
+                w.pending.append(sol)
+            if found is not None:
+                if not windows:   # record() trimmed everything below best away
+                    return finish(best)
+                break  # windows trimmed: restart the sweep on lower IIs
+        if not progress and all(
+            w.infeasible or (w.solver is not None and w.solver.exhausted and not w.pending)
+            for w in windows
+        ):
+            return finish(best, "" if best else f"search space exhausted up to II={hi}")
+        rnd += 1
+    return finish(best, "" if best else f"no mapping up to II={hi} within budget")

@@ -1,4 +1,4 @@
-"""Monomorphism-based space search (paper §IV-C).
+"""Monomorphism-based space search (paper §IV-C), bitset engine.
 
 Given a time solution (kernel label per DFG node), find an injective,
 label-preserving, edge-preserving embedding of the undirected DFG into the
@@ -16,6 +16,16 @@ the intersection of placed neighbours' closed neighbourhoods, forward checking
 unplaced neighbours), and randomised restarts — the classic recipe that gives
 VF3-class robustness [29,30] while exploiting the time labels, which partition
 the injectivity constraint by step and keep the search shallow.
+
+All PE sets are int bitmasks (bit p = PE p; layout contract in DESIGN.md §5,
+masks precomputed in ``CGRA.closed_masks``): candidate intersection is a chain
+of ANDs maintained incrementally per node, occupancy per kernel step is one
+word, and forward checking is popcount over ``closed & ~occ`` — O(words) per
+check instead of O(|set|), which is what lets 20x20 grids (400-bit words)
+search millions of candidates per second in pure Python.
+
+Budgets: ``timeout_s`` (wall clock) and/or ``node_budget`` (deterministic
+visited-node cap, used by tests and the mapper's deterministic mode).
 """
 
 from __future__ import annotations
@@ -49,23 +59,39 @@ def find_monomorphism(
     ii: int,
     *,
     timeout_s: float | None = 4.0,
+    node_budget: int | None = None,
     restarts: int = 6,
     seed: int = 0,
     stats: SpaceStats | None = None,
 ) -> SpaceSolution | None:
-    """Randomised-restart wrapper around one backtracking dive per seed."""
+    """Randomised-restart wrapper around one backtracking dive per seed.
+
+    With ``timeout_s=None`` and a ``node_budget``, the search is fully
+    deterministic: identical inputs always visit the identical tree prefix.
+    """
     stats = stats if stats is not None else SpaceStats()
     start = _time.perf_counter()
     budget = timeout_s if timeout_s is not None else float("inf")
-    per_restart = budget / max(1, restarts)
-    for r in range(max(1, restarts)):
+    n_restarts = max(1, restarts)
+    # geometric restart schedule: cheap early probes, one deep final dive —
+    # weights 1,1,2,4,...  (the last restart gets ~half the total budget)
+    weights = [1] + [1 << min(r, 30) for r in range(n_restarts - 1)]
+    total_w = sum(weights)
+    for r in range(n_restarts):
         remaining = budget - (_time.perf_counter() - start)
         if remaining <= 0:
             break
         stats.restarts += 1
+        frac = weights[r] / total_w
         sol = _search_once(
             dfg, cgra, labels, ii,
-            deadline=_time.perf_counter() + min(per_restart, remaining),
+            deadline=(
+                _time.perf_counter() + min(budget * frac, remaining)
+                if budget != float("inf") else None
+            ),
+            node_budget=(
+                max(1, int(node_budget * frac)) if node_budget is not None else None
+            ),
             rng=random.Random(seed * 7919 + r),
             shuffle=r > 0,   # first dive is deterministic greedy
             stats=stats,
@@ -83,15 +109,18 @@ def _search_once(
     labels: list[int],
     ii: int,
     *,
-    deadline: float,
+    deadline: float | None,
+    node_budget: int | None,
     rng: random.Random,
     shuffle: bool,
     stats: SpaceStats,
 ) -> list[int] | None:
     n = dfg.num_nodes
-    adj_g = dfg.undirected_adjacency()
-    neighbors = cgra.neighbors
+    adj_sets = dfg.undirected_adjacency()
+    adj = [tuple(sorted(s)) for s in adj_sets]
     num_pes = cgra.num_pes
+    closed = cgra.closed_masks
+    full = (1 << num_pes) - 1
 
     if n > num_pes * ii:
         return None
@@ -99,111 +128,147 @@ def _search_once(
         if not 0 <= labels[v] < ii:
             raise ValueError(f"label out of range for node {v}: {labels[v]}")
 
-    closed: list[tuple[int, ...]] = [
-        tuple(sorted((p, *neighbors[p]))) for p in range(num_pes)
-    ]
-    degs = [len(adj_g[v]) for v in range(n)]
-
-    pe_order = sorted(range(num_pes), key=lambda p: -len(neighbors[p]))
+    degs = [len(adj[v]) for v in range(n)]
+    # static value-order rank: interior PEs (largest closed nbhd) first keeps
+    # future intersections large; jitter on restarts
+    pe_rank = sorted(range(num_pes), key=lambda p: -closed[p].bit_count())
     if shuffle:
-        pe_order = list(pe_order)
-        rng.shuffle(pe_order)
+        rng.shuffle(pe_rank)
+    rank_of = [0] * num_pes
+    for i, p in enumerate(pe_rank):
+        rank_of[p] = i
 
     placement = [-1] * n
-    occupied: list[set[int]] = [set() for _ in range(ii)]
-
-    # unplaced-neighbour step profile per node, updated incrementally
-    unplaced_by_step: list[dict[int, int]] = [dict() for _ in range(n)]
+    occ = [0] * ii                       # occupied-PE mask per kernel step
+    # candidate mask per node: AND of placed neighbours' closed masks
+    cand = [full] * n
+    placed_nbrs = [0] * n
+    # unplaced-neighbour demand per (node, step), updated incrementally
+    need = [[0] * ii for _ in range(n)]
     for v in range(n):
-        for u in adj_g[v]:
-            unplaced_by_step[v][labels[u]] = unplaced_by_step[v].get(labels[u], 0) + 1
+        for u in adj[v]:
+            need[v][labels[u]] += 1
 
-    def free_slots(p: int, step: int) -> int:
-        return sum(1 for q in closed[p] if q not in occupied[step])
+    budget_left = node_budget if node_budget is not None else -1
+    check_tick = 0
 
     def forward_ok(u: int) -> bool:
         """Placed node u must keep enough free adjacent slots per step."""
-        pu = placement[u]
-        for step, need in unplaced_by_step[u].items():
-            if need and free_slots(pu, step) < need:
+        cu = closed[placement[u]]
+        nu = need[u]
+        for step in range(ii):
+            want = nu[step]
+            if want and (cu & ~occ[step]).bit_count() < want:
                 return False
         return True
 
-    def candidates(v: int) -> list[int]:
-        placed_nbr_pes = [placement[u] for u in adj_g[v] if placement[u] >= 0]
-        if placed_nbr_pes:
-            base: set[int] | None = None
-            for pu in placed_nbr_pes:
-                s = set(closed[pu])
-                base = s if base is None else (base & s)
-                if not base:
-                    return []
-            cands = [p for p in base if p not in occupied[labels[v]]]
-            # interior-first keeps future intersections large; jitter on restarts
-            cands.sort(key=lambda p: (-len(neighbors[p]),
-                                      rng.random() if shuffle else p))
-            return cands
-        return [p for p in pe_order if p not in occupied[labels[v]]]
+    def seed_candidates(v: int) -> list[int]:
+        free = ~occ[labels[v]]
+        return [p for p in pe_rank if (1 << p) & free]
 
-    def place(v: int, p: int) -> None:
+    def cand_list(v: int) -> list[int]:
+        m = cand[v] & ~occ[labels[v]]
+        out = []
+        while m:
+            b = m & -m
+            out.append(b.bit_length() - 1)
+            m ^= b
+        out.sort(key=rank_of.__getitem__)   # per-restart jitter lives in pe_rank
+        return out
+
+    def place(v: int, p: int) -> list[tuple[int, int]]:
         placement[v] = p
-        occupied[labels[v]].add(p)
-        for u in adj_g[v]:
-            unplaced_by_step[u][labels[v]] -= 1
+        occ[labels[v]] |= 1 << p
+        cp = closed[p]
+        undo: list[tuple[int, int]] = []
+        lv = labels[v]
+        for u in adj[v]:
+            need[u][lv] -= 1
+            if placement[u] < 0:
+                old = cand[u]
+                new = old & cp
+                if new != old:
+                    undo.append((u, old))
+                    cand[u] = new
+            placed_nbrs[u] += 1
+        return undo
 
-    def unplace(v: int, p: int) -> None:
-        for u in adj_g[v]:
-            unplaced_by_step[u][labels[v]] += 1
-        occupied[labels[v]].discard(p)
+    def unplace(v: int, p: int, undo: list[tuple[int, int]]) -> None:
+        lv = labels[v]
+        for u in adj[v]:
+            need[u][lv] += 1
+            placed_nbrs[u] -= 1
+        for u, old in undo:
+            cand[u] = old
+        occ[labels[v]] &= ~(1 << p)
         placement[v] = -1
 
     def select_var() -> tuple[int, list[int]] | None:
         """Dynamic MRV: among frontier nodes (>=1 placed neighbour), pick the
         one with the fewest candidate PEs; empty frontier seeds a component."""
-        best_v, best_c = -1, None
+        best_v, best_c = -1, -1
         for v in range(n):
-            if placement[v] >= 0:
+            if placement[v] >= 0 or not placed_nbrs[v]:
                 continue
-            if not any(placement[u] >= 0 for u in adj_g[v]):
-                continue
-            c = candidates(v)
-            if not c:
+            c = (cand[v] & ~occ[labels[v]]).bit_count()
+            if c == 0:
                 return (v, [])          # dead end: fail fast
-            if best_c is None or (len(c), -degs[v]) < (len(best_c), -degs[best_v]):
+            if best_v < 0 or (c, -degs[v]) < (best_c, -degs[best_v]):
                 best_v, best_c = v, c
-                if len(c) == 1:
+                if c == 1:
                     break
         if best_v >= 0:
-            return best_v, best_c
+            return best_v, cand_list(best_v)
         # new component seed: highest-degree unplaced node
         seeds = [v for v in range(n) if placement[v] < 0]
         if not seeds:
             return None
         v = max(seeds, key=lambda u: (degs[u], rng.random() if shuffle else 0))
-        return v, candidates(v)
+        return v, seed_candidates(v)
 
-    def rec(placed_count: int) -> bool:
+    def rec(placed_count: int) -> int:
+        """1 = solved, 0 = subtree exhausted, -1 = budget/deadline abort."""
+        nonlocal budget_left, check_tick
         if placed_count == n:
-            return True
-        if _time.perf_counter() > deadline:
-            return False
+            return 1
+        check_tick += 1
+        if deadline is not None and not check_tick & 0xFF:
+            if _time.perf_counter() > deadline:
+                return -1
         sel = select_var()
         if sel is None:
-            return True
+            return 1
         v, cands = sel
+        lv = labels[v]
         for p in cands:
             stats.nodes_visited += 1
-            place(v, p)
-            if forward_ok(v) and all(
-                forward_ok(u) for u in adj_g[v] if placement[u] >= 0
-            ):
-                if rec(placed_count + 1):
-                    return True
+            if budget_left >= 0:
+                budget_left -= 1
+                if budget_left < 0:
+                    return -1
+            undo = place(v, p)
+            # arc check: every unplaced neighbour must retain a candidate
+            ok = all(
+                cand[u] & ~occ[labels[u]]
+                for u in adj[v]
+                if placement[u] < 0
+            )
+            if ok and forward_ok(v):
+                ok = all(
+                    forward_ok(u) for u in adj[v] if placement[u] >= 0
+                )
+            if ok:
+                r = rec(placed_count + 1)
+                if r:
+                    if r > 0:
+                        return 1
+                    unplace(v, p, undo)
+                    return -1
             stats.backtracks += 1
-            unplace(v, p)
-        return False
+            unplace(v, p, undo)
+        return 0
 
-    return list(placement) if rec(0) else None
+    return list(placement) if rec(0) > 0 else None
 
 
 def check_monomorphism(

@@ -1,4 +1,4 @@
-"""Time-dimension SMT solver (paper §IV-B).
+"""Time-dimension solver facade (paper §IV-B).
 
 Finds a modulo schedule (an absolute time ``t_v`` per DFG node, equivalently a
 kernel label ``l(v) = t_v mod II`` plus fold ``it_v = t_v div II``) satisfying
@@ -24,27 +24,38 @@ closes the common case, and the mapper additionally retries with blocking
 clauses whenever a time solution admits no monomorphism, which makes the
 overall pipeline complete regardless of mode.
 
-Backends: Z3 (faithful to the paper, default when available) and a pure-Python
-backtracking CP solver (dependency-free cross-check).
+The actual solving is delegated to the backend subsystem
+(core/time_backends/): "z3" is the paper-faithful SMT encoding, "cp" (alias
+"python") the dependency-free incremental CP engine, "auto" picks z3 when
+importable. ``TimeSolver.stats.backend`` always reports the concrete backend
+that ran — never the alias that was asked for.
 """
 
 from __future__ import annotations
 
-import itertools
 import time as _time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from .cgra import CGRA
 from .dfg import DFG
 from .schedule import MobilitySchedule, asap_schedule, modulo_windows
+from .time_backends import (
+    TimeProblem,
+    available_backends,
+    create_backend,
+    resolve_backend_name,
+)
+from .time_backends.base import residue_window
+from .time_backends.z3_backend import HAVE_Z3  # re-exported for callers/tests
 
-try:  # pragma: no cover - availability probed at import
-    import z3  # type: ignore
-
-    HAVE_Z3 = True
-except Exception:  # pragma: no cover
-    z3 = None
-    HAVE_Z3 = False
+__all__ = [
+    "TimeSolution",
+    "TimeSolver",
+    "TimeSolverStats",
+    "check_time_solution",
+    "available_backends",
+    "HAVE_Z3",
+]
 
 
 @dataclass
@@ -74,9 +85,11 @@ class TimeSolverStats:
 class TimeSolver:
     """Enumerates time solutions for (dfg, cgra, II) lazily.
 
-    ``next_solution()`` returns a fresh TimeSolution each call (blocking the
-    previous one), or None when the space is exhausted — the mapper uses this
-    to recover from (rare) monomorphism failures.
+    ``next_solution()`` returns a fresh TimeSolution each call — each with a
+    label partition never proposed before — or None when either the per-call
+    budget ran out (``solver.exhausted`` False: call again to resume) or the
+    space is proven empty (``solver.exhausted`` True). The mapper uses this to
+    recover from monomorphism failures.
     """
 
     def __init__(
@@ -106,8 +119,8 @@ class TimeSolver:
             # infeasible window: expose an exhausted solver
             raise ValueError(f"II={ii} infeasible within horizon {horizon}")
         self.asap, self.alap = windows
-        # Analytic connectivity prechecks (save Z3 from exponential PB-UNSAT
-        # proofs on high-fanout DFGs):
+        # Analytic connectivity prechecks (save the backends from exponential
+        # PB-UNSAT proofs on high-fanout DFGs):
         #  (a) degree bound: deg(v) <= D_M*II - 1 (closed nbhd x steps - own slot)
         #  (b) window-aware: neighbours can only occupy kernel steps their
         #      [asap, alap] windows reach; per-step supply is capped at D_M
@@ -137,198 +150,89 @@ class TimeSolver:
                 )
         self.mobs = MobilitySchedule(tuple(self.asap), tuple(self.alap))
         self.adj = dfg.undirected_adjacency()
-        if backend == "auto":
-            backend = "z3" if HAVE_Z3 else "python"
-        if backend == "z3" and not HAVE_Z3:
-            raise RuntimeError("z3 backend requested but z3 is not importable")
-        self.backend = backend
-        self.stats.backend = backend
-        if backend == "z3":
-            self._init_z3()
-        else:
-            self._py_iter = self._python_solutions()
+        problem = TimeProblem(
+            num_nodes=dfg.num_nodes,
+            edges=tuple((e.src, e.dst, e.distance) for e in dfg.edges),
+            adj=tuple(frozenset(s) for s in self.adj),
+            ii=ii,
+            asap=tuple(self.asap),
+            alap=tuple(self.alap),
+            cap=cgra.num_pes,
+            d_m=d_m,
+            strict=connectivity == "strict",
+            seed=seed,
+        )
+        self.backend = resolve_backend_name(backend)
+        self._engine = create_backend(self.backend, problem, timeout_s=timeout_s)
+        self.stats.backend = self._engine.name
 
-    # ------------------------------------------------------------------- z3
-    def _init_z3(self) -> None:
-        n = self.dfg.num_nodes
+    @property
+    def exhausted(self) -> bool:
+        return self._engine.exhausted
+
+    def block(self, labels: list[int]) -> None:
+        """Externally exclude a label partition (e.g. register-pressure reject)."""
+        self._engine.block(labels)
+        self.stats.blocked += 1
+
+    def realize_compact(self, sol: TimeSolution) -> TimeSolution:
+        """Lifetime-compacting re-realization of ``sol``'s label partition.
+
+        Backends return the *minimal* schedule for a partition (every node as
+        early as its window and residue allow), which maximises
+        producer-to-consumer gaps and therefore register lifetimes. This pass
+        keeps every sink at its minimal time but pushes every producer as
+        late as its consumers permit (greatest fixpoint of the difference
+        constraints, floor-rounded to each node's residue class) — same
+        labels, same validity, shorter lifetimes. Used by the mapper's
+        register-pressure-constrained retries (paper §V-3 extension).
+        """
         ii = self.ii
-        self._solver = z3.Solver()
-        if self.timeout_s is not None:
-            self._solver.set("timeout", int(self.timeout_s * 1000))
-        self._solver.set("random_seed", self.seed & 0xFFFF)
-        self._t = [z3.Int(f"t_{v}") for v in range(n)]
-        self._k = [z3.Int(f"k_{v}") for v in range(n)]
-        self._f = [z3.Int(f"f_{v}") for v in range(n)]
-        s = self._solver
-        max_fold = max(self.alap) // ii + 1 if n else 1
-        for v in range(n):
-            s.add(self._t[v] >= self.asap[v], self._t[v] <= self.alap[v])
-            # t = II*fold + k, 0 <= k < II  (linear decomposition; Z3 handles
-            # this far better than the `mod` operator on small grids)
-            s.add(self._t[v] == ii * self._f[v] + self._k[v])
-            s.add(self._k[v] >= 0, self._k[v] < ii)
-            s.add(self._f[v] >= 0, self._f[v] <= max_fold)
-        # 1. modulo-scheduling constraints
+        labels = sol.labels
+        n = self.dfg.num_nodes
+        has_succ = [False] * n
         for e in self.dfg.edges:
-            s.add(self._t[e.dst] >= self._t[e.src] + 1 - ii * e.distance)
-        # 2. capacity constraints
-        cap = self.cgra.num_pes
-        for i in range(ii):
-            s.add(
-                z3.PbLe([(self._k[v] == i, 1) for v in range(n)], cap)
-            )
-        # 3. connectivity constraints
-        d_m = self.cgra.connectivity_degree
+            if e.src != e.dst:
+                has_succ[e.src] = True
+        ub: list[int] = []
         for v in range(n):
-            nbrs = sorted(self.adj[v])
-            if not nbrs:
+            if not has_succ[v]:
+                ub.append(sol.t_abs[v])     # sinks stay put
                 continue
-            for i in range(ii):
-                s.add(
-                    z3.PbLe([(self._k[u] == i, 1) for u in nbrs], d_m)
-                )
-            if self.connectivity == "strict":
-                # same-step neighbours can only use the open neighbourhood
-                s.add(
-                    z3.PbLe(
-                        [(self._k[u] == self._k[v], 1) for u in nbrs], d_m - 1
-                    )
-                )
-        if self.connectivity == "strict":
-            # Mesh/torus PE graphs are bipartite => triangle-free, so three
-            # mutually-adjacent DFG nodes can never share a kernel step (they
-            # would need a triangle of distinct, mutually-adjacent PEs). The
-            # published constraints admit such partitions; excluding them here
-            # saves futile monomorphism searches (DESIGN.md §7).
-            for u, v, w in _triangles(self.adj):
-                s.add(z3.Or(self._k[u] != self._k[v], self._k[u] != self._k[w]))
+            win = residue_window(self.asap[v], self.alap[v], labels[v], ii)
+            assert win is not None          # sol.t_abs[v] inhabits the class
+            ub.append(win[1])
+        t = list(ub)
+        changed = True
+        while changed:
+            changed = False
+            for e in self.dfg.edges:
+                bound = t[e.dst] - 1 + ii * e.distance   # t_src <= bound
+                if t[e.src] > bound:
+                    nt = bound - ((bound - labels[e.src]) % ii)
+                    t[e.src] = nt
+                    changed = True
+        # sol is a solution of the same system, so the greatest fixpoint is
+        # pointwise >= sol and in particular within every window
+        return TimeSolution(ii, t)
 
-    def next_solution(self) -> TimeSolution | None:
+    def next_solution(
+        self,
+        *,
+        deadline: float | None = None,
+        step_budget: int | None = None,
+    ) -> TimeSolution | None:
         start = _time.perf_counter()
         try:
-            if self.backend == "z3":
-                res = self._solver.check()
-                if res != z3.sat:
-                    return None
-                model = self._solver.model()
-                t_abs = [model.eval(self._t[v]).as_long() for v in range(self.dfg.num_nodes)]
-                # Block the *label partition*, not just this t_abs: the space
-                # search depends only on labels, so any schedule with the same
-                # labels would fail the same way. This makes the mapper's
-                # retry-on-mono-failure loop converge quickly.
-                self._solver.add(
-                    z3.Or([self._k[v] != t_abs[v] % self.ii for v in range(self.dfg.num_nodes)])
-                )
-                if self.stats.blocked == 0:
-                    # Retry solves want *structurally* diverse label partitions
-                    # (the first solve wants fast default heuristics) — flip to
-                    # randomised phase selection once retries begin.
-                    try:
-                        self._solver.set("phase_selection", 5)
-                    except z3.Z3Exception:  # pragma: no cover
-                        pass
-                self.stats.blocked += 1
-                self.stats.num_solutions_enumerated += 1
-                return TimeSolution(self.ii, t_abs)
-            try:
-                t_abs = next(self._py_iter)
-            except StopIteration:
+            t_abs = self._engine.next_solution(
+                deadline=deadline, step_budget=step_budget
+            )
+            if t_abs is None:
                 return None
             self.stats.num_solutions_enumerated += 1
             return TimeSolution(self.ii, list(t_abs))
         finally:
             self.stats.solver_time_s += _time.perf_counter() - start
-
-    # -------------------------------------------------------------- fallback
-    def _python_solutions(self):
-        """Backtracking CP enumeration (most-constrained-first ordering)."""
-        n = self.dfg.num_nodes
-        ii = self.ii
-        cap = self.cgra.num_pes
-        d_m = self.cgra.connectivity_degree
-        order = sorted(range(n), key=lambda v: (self.alap[v] - self.asap[v], -len(self.adj[v])))
-        t_abs = [-1] * n
-        count_per_step = [0] * ii
-        deadline = (
-            _time.perf_counter() + self.timeout_s if self.timeout_s else None
-        )
-
-        out_edges: list[list] = [[] for _ in range(n)]
-        in_edges: list[list] = [[] for _ in range(n)]
-        for e in self.dfg.edges:
-            out_edges[e.src].append(e)
-            in_edges[e.dst].append(e)
-        strict = self.connectivity == "strict"
-
-        def ok(v: int, t: int) -> bool:
-            k = t % ii
-            if count_per_step[k] + 1 > cap:
-                return False
-            for e in out_edges[v]:
-                if t_abs[e.dst] >= 0 and t_abs[e.dst] < t + 1 - ii * e.distance:
-                    return False
-            for e in in_edges[v]:
-                if t_abs[e.src] >= 0 and t < t_abs[e.src] + 1 - ii * e.distance:
-                    return False
-            # connectivity of v: placed neighbours of v, bucketed by step
-            per_step: dict[int, int] = {}
-            for u in self.adj[v]:
-                if t_abs[u] >= 0:
-                    su = t_abs[u] % ii
-                    per_step[su] = per_step.get(su, 0) + 1
-            if per_step.get(k, 0) > (d_m - 1 if strict else d_m):
-                return False
-            if any(c > d_m for c in per_step.values()):
-                return False
-            if strict:
-                # no mono-chromatic triangle (bipartite PE graph)
-                same = [u for u in self.adj[v] if t_abs[u] >= 0 and t_abs[u] % ii == k]
-                for a_i in range(len(same)):
-                    for b_i in range(a_i + 1, len(same)):
-                        if same[b_i] in self.adj[same[a_i]]:
-                            return False
-            # connectivity of each placed neighbour u: v adds one to u's step-k count
-            for u in self.adj[v]:
-                if t_abs[u] < 0:
-                    continue
-                cu = 1  # v itself
-                for w in self.adj[u]:
-                    if w != v and t_abs[w] >= 0 and t_abs[w] % ii == k:
-                        cu += 1
-                limit = d_m - 1 if strict and t_abs[u] % ii == k else d_m
-                if cu > limit:
-                    return False
-            return True
-
-        def rec(idx: int):
-            if deadline and _time.perf_counter() > deadline:
-                return
-            if idx == n:
-                yield tuple(t_abs)
-                return
-            v = order[idx]
-            for t in range(self.asap[v], self.alap[v] + 1):
-                if ok(v, t):
-                    t_abs[v] = t
-                    count_per_step[t % ii] += 1
-                    yield from rec(idx + 1)
-                    count_per_step[t % ii] -= 1
-                    t_abs[v] = -1
-
-        yield from rec(0)
-
-
-def _triangles(adj: list[set[int]]) -> list[tuple[int, int, int]]:
-    """All triangles {u<v<w} of an undirected adjacency-set list."""
-    out = []
-    for u in range(len(adj)):
-        for v in adj[u]:
-            if v <= u:
-                continue
-            for w in adj[u] & adj[v]:
-                if w > v:
-                    out.append((u, v, w))
-    return out
 
 
 def check_time_solution(

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import shard_map
 from . import attention as attn_mod
 from .api import ArchConfig, ModelSpec
 from .attention import (
@@ -129,7 +130,7 @@ def block_apply(
                 },
                 x_spec,
             )
-            f, aux = jax.shard_map(
+            f, aux = shard_map(
                 wrapped, mesh=mesh, in_specs=specs_in,
                 out_specs=(out_spec, P()),
             )(p["moe"], h)

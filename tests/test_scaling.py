@@ -1,0 +1,50 @@
+"""Large-CGRA scaling tests: the rebuilt search core must handle 20x20 (400
+PE) grids inside the CI budget — the regime the paper's Fig. 5 targets and
+the one the pre-rebuild Python-set engine could not reach interactively."""
+
+import time
+
+import pytest
+
+from repro.core import CGRA
+from repro.core.benchsuite import load_suite
+from repro.core.mapper import map_dfg
+from repro.core.simulate import check_equivalence
+
+CI_BUDGET_S = 60.0
+
+
+def test_20x20_midsize_dfg_maps_within_ci_budget():
+    """A mid-size DFG (nw: 33 nodes) end-to-end on a 20x20 CGRA in < 60 s."""
+    d = load_suite()["nw"]
+    start = time.perf_counter()
+    res = map_dfg(d, CGRA(20, 20), time_budget_s=40, use_cache=False)
+    elapsed = time.perf_counter() - start
+    assert res.ok, res.reason
+    assert res.mapping.validate() == []
+    assert res.mapping.ii >= res.stats.m_ii
+    assert elapsed < CI_BUDGET_S, f"20x20 mapping took {elapsed:.1f}s"
+    check_equivalence(res.mapping, num_iters=3)
+
+
+def test_20x20_aes_near_flat_vs_4x4():
+    """Fig. 5 property: `aes` compile time must not blow up with grid size —
+    20x20 within 5x of 4x4 (the paper's joint baselines grow ~10^5x)."""
+    d = load_suite()["aes"]
+    times = {}
+    for size in (4, 20):
+        res = map_dfg(d, CGRA(size, size), time_budget_s=30, use_cache=False)
+        assert res.ok, f"aes@{size}: {res.reason}"
+        times[size] = max(res.stats.total_s, 0.05)  # clamp timer noise floor
+    assert times[20] <= 5 * times[4], (
+        f"aes not near-flat: 4x4 {times[4]:.3f}s vs 20x20 {times[20]:.3f}s"
+    )
+
+
+@pytest.mark.parametrize("size", [10, 20])
+def test_large_grid_mapping_is_valid_and_executes(size):
+    d = load_suite()["sha1"]
+    res = map_dfg(d, CGRA(size, size), time_budget_s=30, use_cache=False)
+    assert res.ok, res.reason
+    assert res.mapping.validate() == []
+    check_equivalence(res.mapping, num_iters=3)

@@ -10,6 +10,8 @@ mode plus mapper retries is what makes the pipeline complete in practice.
 import random
 
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import CGRA
