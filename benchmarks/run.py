@@ -6,10 +6,14 @@
 
 Each section also emits a ``BENCH_<name>.json`` artifact (consumed by CI and
 by the Fig. 5 near-flat acceptance gate) and prints a
-``name,us_per_call,derived`` CSV at the end.
+``name,us_per_call,derived`` CSV at the end. ``BENCH_table3.json`` carries
+per-kernel wall time plus mapping-cache hit/miss counters (per row and
+aggregate), so service-layer gains — batch parallelism, warm persistent
+cache — show up in the tracked artifacts.
 
-Full sweep: ``PYTHONPATH=src python -m benchmarks.run``
-CI smoke:   ``PYTHONPATH=src python -m benchmarks.run --smoke``
+Full sweep:   ``PYTHONPATH=src python -m benchmarks.run``
+CI smoke:     ``PYTHONPATH=src python -m benchmarks.run --smoke``
+Service mode: ``PYTHONPATH=src python -m benchmarks.run --jobs 4 --cache-dir /tmp/maps``
 """
 
 from __future__ import annotations
@@ -28,6 +32,16 @@ def main(argv=None) -> None:
     )
     ap.add_argument("--skip-joint", action="store_true")
     ap.add_argument("--only", choices=["table3", "fig5", "kernels"])
+    ap.add_argument(
+        "--jobs", type=int, default=1,
+        help="worker processes for the table3 sweep (>1 routes through "
+             "repro.core.service.compile_many)",
+    )
+    ap.add_argument(
+        "--cache-dir", default=None,
+        help="persistent mapping cache directory; a warm second run then "
+             "reports disk hits instead of solve times",
+    )
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
@@ -38,7 +52,8 @@ def main(argv=None) -> None:
     csv_rows: list[tuple[str, float, str]] = []
 
     if args.only in (None, "table3"):
-        kw = dict(run_joint=not args.skip_joint)
+        kw = dict(run_joint=not args.skip_joint, jobs=args.jobs,
+                  cache_dir=args.cache_dir)
         if args.quick:
             kw.update(sizes=(2, 5), ours_budget_s=20, joint_budget_s=20,
                       benchmarks=["bitcount", "fft", "gsm", "susan", "aes"])
@@ -48,12 +63,19 @@ def main(argv=None) -> None:
         for line in bench_table3.summarize(rows):
             print("TABLE3:", line)
         with open("BENCH_table3.json", "w") as f:
-            json.dump({"rows": rows}, f, indent=2)
+            json.dump(
+                {
+                    "jobs": args.jobs,
+                    "cache": bench_table3.cache_counters(rows),
+                    "rows": rows,
+                },
+                f, indent=2,
+            )
         for r in rows:
             csv_rows.append(
                 (
                     f"table3_{r['bench']}_{r['size']}x{r['size']}",
-                    r["ours_time_s"] * 1e6,
+                    r["wall_s"] * 1e6,
                     f"II={r.get('ours_II')};mII={r['mII']};CTR={r.get('ctr', '')}",
                 )
             )

@@ -1,0 +1,161 @@
+"""``python -m repro.compile`` — batch-compile DFGs and emit a JSON report.
+
+The CLI front-end of the compilation service (``repro.core.service``,
+DESIGN.md §8): it gathers a workload (the built-in Table III suite and/or a
+directory of ``DFG.to_json`` files), maps every DFG onto the requested CGRA
+across a process pool, and writes a machine-readable report with per-job wall
+times, IIs, and cache hit/miss counters.
+
+Examples::
+
+    # the 17-benchmark suite on a 5x5 CGRA, 4 workers, persistent cache
+    PYTHONPATH=src python -m repro.compile --suite --size 5 --jobs 4 \\
+        --cache-dir ~/.cache/repro-maps --report report.json
+
+    # a directory of extracted DFG JSON files, sequential + deterministic
+    PYTHONPATH=src python -m repro.compile --dfg-dir kernels/ --size 8 \\
+        --jobs 1 --deterministic
+
+A second run against the same ``--cache-dir`` serves every job from the
+persistent cache (``"solved": 0`` in the report's cache counters) — warm
+restarts of a compile server never re-solve.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.core.cgra import CGRA
+from repro.core.dfg import DFG
+from repro.core.service import CompileJob, compile_many
+
+
+def _load_dfg_dir(path: str) -> list[DFG]:
+    dfgs = []
+    for fn in sorted(os.listdir(path)):
+        if not fn.endswith(".json"):
+            continue
+        full = os.path.join(path, fn)
+        try:
+            with open(full, "r", encoding="utf-8") as f:
+                dfg = DFG.from_json(f.read())
+            dfg.validate()
+        except (OSError, ValueError, KeyError) as exc:
+            print(f"skipping {full}: {exc}", file=sys.stderr)
+            continue
+        if dfg.name == "dfg":
+            dfg.name = os.path.splitext(fn)[0]
+        dfgs.append(dfg)
+    return dfgs
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.compile",
+        description="Batch-compile DFGs onto a CGRA and emit a JSON report.",
+    )
+    src = ap.add_argument_group("workload")
+    src.add_argument("--suite", action="store_true",
+                     help="compile the built-in 17-benchmark Table III suite")
+    src.add_argument("--bench", action="append", default=[],
+                     help="one suite benchmark by name (repeatable)")
+    src.add_argument("--dfg-dir", metavar="DIR",
+                     help="directory of DFG.to_json files (*.json)")
+    tgt = ap.add_argument_group("target CGRA")
+    tgt.add_argument("--size", type=int, default=5,
+                     help="square grid size N (NxN, default 5)")
+    tgt.add_argument("--rows", type=int, help="grid rows (overrides --size)")
+    tgt.add_argument("--cols", type=int, help="grid cols (overrides --size)")
+    tgt.add_argument("--topology", choices=["mesh", "torus"], default="mesh")
+    svc = ap.add_argument_group("service")
+    svc.add_argument("--jobs", type=int, default=os.cpu_count() or 1,
+                     help="worker processes (1 = sequential in-process)")
+    svc.add_argument("--deadline-s", type=float, default=60.0,
+                     help="per-job wall budget in seconds")
+    svc.add_argument("--deterministic", action="store_true",
+                     help="step-budgeted reproducible mode (bypasses caches)")
+    svc.add_argument("--cache-dir", default=None,
+                     help="persistent mapping cache directory "
+                          "(default: $REPRO_CACHE_DIR if set)")
+    svc.add_argument("--no-cache", action="store_true",
+                     help="disable both mapping cache layers")
+    mp_ = ap.add_argument_group("mapper")
+    mp_.add_argument("--max-slack", type=int, default=3)
+    mp_.add_argument("--connectivity", choices=["strict", "paper"],
+                     default="strict")
+    mp_.add_argument("--backend", default="auto",
+                     help="time backend: auto | cp | z3")
+    mp_.add_argument("--max-register-pressure", type=int, default=None)
+    ap.add_argument("--report", metavar="PATH", default=None,
+                    help="write the JSON report here (default: stdout summary only)")
+    ap.add_argument("--quiet", action="store_true")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+
+    dfgs: list[DFG] = []
+    if args.suite or args.bench:
+        from repro.core.benchsuite import load_suite
+
+        # --suite always means the full 17 (it subsumes any --bench names)
+        suite = load_suite(names=None if args.suite else args.bench)
+        dfgs.extend(suite.values())
+    if args.dfg_dir:
+        dfgs.extend(_load_dfg_dir(args.dfg_dir))
+    if not dfgs:
+        print("no DFGs to compile: pass --suite, --bench, or --dfg-dir",
+              file=sys.stderr)
+        return 2
+
+    rows = args.rows if args.rows is not None else args.size
+    cols = args.cols if args.cols is not None else args.size
+    cgra = CGRA(rows, cols, topology=args.topology)
+
+    batch = [CompileJob(d, cgra) for d in dfgs]
+    report = compile_many(
+        batch,
+        jobs=args.jobs,
+        deadline_s=args.deadline_s,
+        deterministic=args.deterministic,
+        cache_dir=args.cache_dir,
+        use_cache=not args.no_cache,
+        map_options={
+            "max_slack": args.max_slack,
+            "connectivity": args.connectivity,
+            "backend": args.backend,
+            "max_register_pressure": args.max_register_pressure,
+        },
+    )
+
+    if not args.quiet:
+        for j in report.jobs:
+            status = f"II={j.ii}" if j.ok else f"FAILED ({j.reason})"
+            src_ = ("memory" if j.cache_hit
+                    else "disk" if j.disk_cache_hit else "solved")
+            print(f"{j.name:20s} {status:24s} {j.wall_s:7.3f}s  [{src_}]")
+        c = report.cache_counters
+        print(f"--- {len(report.jobs)} jobs on {cgra} in {report.wall_s:.2f}s "
+              f"({report.num_workers} workers): {c['solved']} solved, "
+              f"{c['memory_hits']} memory hits, {c['disk_hits']} disk hits, "
+              f"{c['failed']} failed")
+
+    if args.report:
+        payload = {
+            "cgra": {"rows": rows, "cols": cols, "topology": args.topology},
+            "deterministic": args.deterministic,
+            **report.as_dict(),
+        }
+        with open(args.report, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=2)
+        if not args.quiet:
+            print(f"wrote {os.path.abspath(args.report)}")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -117,8 +117,29 @@ def _weighted_sample(rng: random.Random, pool: list[int], weights: list[float], 
     return chosen
 
 
-def load_suite() -> dict[str, DFG]:
-    """All 17 Table III benchmarks, deterministically generated."""
+def load_suite(names: list[str] | None = None) -> dict[str, DFG]:
+    """Table III benchmarks, deterministically generated.
+
+    ``names`` selects a subset (order-preserving, unknown names rejected);
+    the default is all 17. The returned DFGs are the batch-compilation
+    workload consumed by ``python -m repro.compile --suite`` and
+    ``compile_many`` (see ``repro.core.service``).
+
+    Example::
+
+        from repro.core.benchsuite import load_suite
+
+        suite = load_suite(["bitcount", "fft"])
+        assert [d.num_nodes for d in suite.values()] == [7, 20]
+    """
+    if names is not None:
+        unknown = [n for n in names if n not in TABLE3_BENCHMARKS]
+        if unknown:
+            raise ValueError(
+                f"unknown benchmark(s) {unknown}; "
+                f"choose from {sorted(TABLE3_BENCHMARKS)}"
+            )
+        return {n: make_benchmark_dfg(n, *TABLE3_BENCHMARKS[n]) for n in names}
     return {
         name: make_benchmark_dfg(name, n, rec)
         for name, (n, rec) in TABLE3_BENCHMARKS.items()

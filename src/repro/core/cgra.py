@@ -20,6 +20,25 @@ from functools import cached_property
 
 @dataclass(frozen=True)
 class CGRA:
+    """An R×C grid of single-cycle PEs with neighbour-readable register files.
+
+    This is the spatial half of every mapping: the monomorphism search embeds
+    a labelled DFG into ``MRRG(cgra, II)``, and a dependency u→v is routable
+    iff ``placement[u]`` is closed-adjacent to ``placement[v]`` (DESIGN.md
+    §2). Instances are frozen (hashable, picklable across service workers)
+    and precompute their adjacency as bitmasks (DESIGN.md §5).
+
+    Example::
+
+        from repro.core import CGRA
+
+        cgra = CGRA(4, 4)                   # paper's mesh
+        assert cgra.num_pes == 16
+        assert cgra.connectivity_degree == 5    # D_M: self + 4 neighbours
+        torus = CGRA(4, 4, topology="torus")    # TPU-ICI-shaped variant
+        assert all(len(n) == 4 for n in torus.neighbors)
+    """
+
     rows: int
     cols: int
     topology: str = "mesh"          # "mesh" (paper) | "torus" (TPU ICI)

@@ -62,7 +62,28 @@ class Edge:
 
 @dataclass
 class DFG:
-    """A directed data-flow graph with loop-carried distances."""
+    """A directed data-flow graph with loop-carried distances.
+
+    The compiler's input: one loop body whose nodes are single-cycle ops and
+    whose edges carry an iteration *distance* (0 = intra-iteration,
+    ≥1 = loop-carried). A mapping assigns each node an absolute time
+    (*label* ``t mod II`` + *fold* ``t div II``, DESIGN.md §1) and a PE.
+
+    Example — a 2-node accumulator with a distance-1 recurrence::
+
+        from repro.core import DFG, Edge
+
+        dfg = DFG(num_nodes=2, ops=["input", "add"],
+                  edges=[Edge(0, 1), Edge(1, 1, distance=1)],
+                  name="acc")
+        dfg.validate()              # intra-iteration part must be a DAG
+        assert dfg.rec_ii() == 1    # 1-edge cycle / distance 1
+        text = dfg.to_json()        # round-trips via DFG.from_json
+        assert DFG.from_json(text).stable_hash() == dfg.stable_hash()
+
+    ``stable_hash()`` is the content address used by both mapping-cache
+    layers; ``name`` and ``imms`` are deliberately excluded from it.
+    """
 
     num_nodes: int
     edges: list[Edge]

@@ -22,7 +22,12 @@ smallest-II-first quality preference. Time solutions whose partitions failed
 to embed are kept and retried with bigger space budgets/new seeds in later
 rounds before fresh partitions are enumerated (time work is never repeated),
 and finished mappings land in a small LRU cache keyed on (DFG content hash,
-CGRA dims, II) so repeated compilations of the same kernel are free.
+CGRA dims, II) so repeated compilations of the same kernel are free. A
+persistent on-disk layer under the LRU (``cache_dir`` / $REPRO_CACHE_DIR,
+service/cache.py, DESIGN.md §9) extends that reuse across processes and
+restarts, and the service layer (service/batch.py, DESIGN.md §8) fans the
+mapper out across worker processes — per batch via ``compile_many`` and per
+job via (II, slack) window striping (``window_offset``/``window_stride``).
 
 ``deterministic=True`` replaces every wall-clock budget with visited-node /
 solver-step budgets: identical inputs then take the identical search path
@@ -39,6 +44,7 @@ from .cgra import CGRA
 from .dfg import DFG
 from .mono import SpaceStats, check_monomorphism, find_monomorphism
 from .schedule import min_ii, rec_ii, res_ii
+from .time_backends import resolve_backend_name
 from .time_smt import TimeSolution, TimeSolver, check_time_solution
 
 
@@ -115,7 +121,8 @@ class MapperStats:
     rec_ii: int = -1
     backend: str = ""
     rounds: int = 0
-    cache_hit: bool = False
+    cache_hit: bool = False          # served from the in-process LRU
+    disk_cache_hit: bool = False     # served from the persistent disk cache
     space_nodes_visited: int = 0
 
 
@@ -185,12 +192,27 @@ def ii_slack_windows(lo_ii: int, hi_ii: int, max_slack: int):
             yield ii, slack
 
 
+# Default slack depth of the sweep; shared with the racing clamp
+# (service/batch.py) so both agree on the window-space size.
+DEFAULT_MAX_SLACK = 3
+
+
+def default_max_ii(m_ii: int) -> int:
+    """Default upper II bound of the sweep.
+
+    Single source of truth for the window-space size: used by ``map_dfg``
+    and by the service layer's racing clamp (service/batch.py), which must
+    agree on how many windows exist.
+    """
+    return max(m_ii * 4, m_ii + 8)
+
+
 def map_dfg(
     dfg: DFG,
     cgra: CGRA,
     *,
     max_ii: int | None = None,
-    max_slack: int = 3,
+    max_slack: int = DEFAULT_MAX_SLACK,
     connectivity: str = "strict",
     backend: str = "auto",
     time_budget_s: float = 120.0,
@@ -200,24 +222,60 @@ def map_dfg(
     max_register_pressure: int | None = None,
     deterministic: bool = False,
     use_cache: bool = True,
+    cache_dir: str | None = None,
+    window_offset: int = 0,
+    window_stride: int = 1,
+    should_stop=None,
     seed: int = 0,
 ) -> MapResult:
-    """Map `dfg` onto `cgra` with the decoupled pipeline.
+    """Map ``dfg`` onto ``cgra`` with the decoupled TIME→SPACE pipeline.
 
-    ``max_register_pressure`` enables register-file-aware mapping — the
-    restriction the paper's §V-3 leaves to future work: mappings whose
-    steady-state per-PE live-value count exceeds the budget are rejected and
-    the search continues, so accepted mappings are guaranteed to fit the
-    register files.
+    This is the library's main entry point. It sweeps (II, slack) *windows*
+    starting at mII = max(ResII, RecII): for each window the time backend
+    proposes a *label partition* (kernel step ``t mod II`` per node, plus a
+    *fold* ``t div II``), and the monomorphism engine tries to embed it into
+    the MRRG. The portfolio layer interleaves all windows in rounds of growing
+    budgets (DESIGN.md §6), so an infeasible low II cannot starve the sweep.
 
-    ``deterministic=True`` swaps every wall-clock limit for node/step budgets
-    so results are load-independent and reproducible; ``time_budget_s`` /
-    ``space_timeout_s`` / ``window_timeout_s`` are then ignored, the mapping
-    cache is bypassed (process history must not leak into results), and the
-    backend must be (or ``"auto"``-resolve to) the cp backend — z3 cannot
-    honor step budgets.
+    Example — map the paper's running example onto a 2×2 mesh::
+
+        from repro.core import CGRA, map_dfg, running_example
+
+        res = map_dfg(running_example(), CGRA(2, 2))
+        assert res.ok and res.mapping.ii == 4          # paper Fig. 2b
+        print(res.mapping.pretty())                    # kernel table
+        labels, folds = res.mapping.labels, res.mapping.folds
+
+    Key options:
+
+    * ``max_register_pressure`` enables register-file-aware mapping — the
+      restriction the paper's §V-3 leaves to future work: mappings whose
+      steady-state per-PE live-value count exceeds the budget are rejected and
+      the search continues, so accepted mappings are guaranteed to fit the
+      register files.
+    * ``deterministic=True`` swaps every wall-clock limit for node/step
+      budgets so results are load-independent and reproducible;
+      ``time_budget_s`` / ``space_timeout_s`` / ``window_timeout_s`` are then
+      ignored, both mapping caches are bypassed (process/disk history must not
+      leak into results), and the backend must be (or ``"auto"``-resolve to)
+      the cp backend — z3 cannot honor step budgets.
+    * ``cache_dir`` layers the persistent on-disk mapping cache (DESIGN.md §9)
+      under the in-process LRU: memory first, disk second, solve last; a disk
+      hit is promoted to memory and solved mappings are written to both.
+      Defaults to ``$REPRO_CACHE_DIR`` when set; ``use_cache=False`` disables
+      both layers.
+    * ``window_offset`` / ``window_stride`` restrict the sweep to every
+      ``stride``-th window of the canonical ``ii_slack_windows`` order — the
+      striping used by the service layer to race one search across worker
+      processes (DESIGN.md §8). ``should_stop`` (a zero-arg callable) is the
+      matching cooperative-cancellation hook: polled at every budget check, a
+      True return finishes with the best mapping found so far.
     """
     dfg.validate()
+    if window_stride < 1 or not (0 <= window_offset < window_stride):
+        raise ValueError(
+            f"invalid window striping: offset {window_offset}, stride {window_stride}"
+        )
     if deterministic:
         # the bounded/reproducible contract only holds on the cp backend (z3
         # cannot honor step budgets), and only when process history cannot
@@ -230,15 +288,19 @@ def map_dfg(
                 "wall-clock-bounded and load-dependent"
             )
         use_cache = False
+    # resolve now so a bad backend name raises here instead of being
+    # swallowed by the per-window infeasibility handler below
+    backend = resolve_backend_name(backend)
     stats = MapperStats()
     stats.res_ii = res_ii(dfg, cgra)
     stats.rec_ii = rec_ii(dfg)
     stats.m_ii = min_ii(dfg, cgra)
     start = _time.perf_counter()
     deadline = None if deterministic else start + time_budget_s
-    hi = max_ii if max_ii is not None else max(stats.m_ii * 4, stats.m_ii + 8)
+    hi = max_ii if max_ii is not None else default_max_ii(stats.m_ii)
 
     base_key = None
+    disk = None
     if use_cache:
         base_key = _cache_base_key(dfg, cgra, connectivity, max_register_pressure)
         hit = _cache_get(base_key, stats.m_ii, hi)
@@ -246,14 +308,47 @@ def map_dfg(
             ii, t_abs, placement = hit
             mapping = Mapping(dfg=dfg, cgra=cgra, ii=ii, t_abs=t_abs,
                               placement=placement)
-            if not mapping.validate():
+            if not mapping.validate(connectivity=connectivity):
                 stats.cache_hit = True
                 stats.final_ii = ii
                 stats.backend = "cache"
                 stats.total_s = _time.perf_counter() - start
                 return MapResult(mapping, stats)
+        # memory missed: consult the persistent layer (DESIGN.md §9).
+        # Function-local import by design: service/batch.py imports this
+        # module at top level, so a module-level import here would close an
+        # import cycle — keep any future service imports lazy like this one.
+        from .service.cache import DiskMappingCache, resolve_cache_dir
 
-    windows = [_Window(ii, s) for ii, s in ii_slack_windows(stats.m_ii, hi, max_slack)]
+        resolved = resolve_cache_dir(cache_dir)
+        if resolved is not None:
+            disk = DiskMappingCache(resolved)
+            lo = stats.m_ii
+            while True:
+                dhit = disk.get(base_key, lo, hi)
+                if dhit is None:
+                    break
+                ii, t_abs, placement = dhit
+                mapping = Mapping(dfg=dfg, cgra=cgra, ii=ii, t_abs=t_abs,
+                                  placement=placement)
+                if mapping.validate(connectivity=connectivity):
+                    # schema-valid but semantically invalid: drop it so it
+                    # cannot poison every future cold lookup, try higher IIs
+                    disk.invalidate(base_key, ii)
+                    lo = ii + 1
+                    continue
+                _cache_put(base_key, mapping)          # promote to memory
+                stats.disk_cache_hit = True
+                stats.final_ii = ii
+                stats.backend = "disk-cache"
+                stats.total_s = _time.perf_counter() - start
+                return MapResult(mapping, stats)
+
+    windows = [
+        _Window(ii, s)
+        for idx, (ii, s) in enumerate(ii_slack_windows(stats.m_ii, hi, max_slack))
+        if idx % window_stride == window_offset
+    ]
     # deterministic mode has no wall-clock backstop: cap the per-round node
     # budgets so total work is bounded by rounds x windows x node caps
     det_space_cap = 400_000
@@ -267,18 +362,22 @@ def map_dfg(
     polish_left = 0
 
     def out_of_time() -> bool:
+        if should_stop is not None and should_stop():
+            return True
         return deadline is not None and _time.perf_counter() > deadline
 
     def finish(mapping: Mapping | None, reason: str = "") -> MapResult:
         stats.time_phase_s += sum(s.stats.solver_time_s for s in solvers)
         stats.total_s = _time.perf_counter() - start
         if mapping is not None:
-            errs = mapping.validate()
+            errs = mapping.validate(connectivity=connectivity)
             if errs:  # defensive: should be impossible
                 raise AssertionError(f"mapper produced invalid mapping: {errs}")
             stats.final_ii = mapping.ii
             if use_cache:
                 _cache_put(base_key, mapping)
+                if disk is not None:
+                    disk.put(base_key, mapping.ii, mapping.t_abs, mapping.placement)
         return MapResult(mapping, stats, reason=reason)
 
     def try_space(

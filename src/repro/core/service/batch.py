@@ -1,0 +1,387 @@
+"""Process-pool batch compilation service (DESIGN.md §8).
+
+Two axes of parallelism over the portfolio mapper (``core/mapper.py``):
+
+* **Inter-job** — :func:`compile_many` maps many independent DFGs across a
+  process pool (the search core is pure Python, so threads would serialise on
+  the GIL). Each job carries its own per-job deadline; a shared stop event
+  gives cooperative cancellation of in-flight work, and ``jobs<=1`` degrades
+  to a fully in-process sequential run (used by deterministic CI smoke).
+* **Intra-job** — :func:`map_dfg_racing` races ONE hard mapping problem by
+  striping the canonical (II, slack) window order across workers
+  (``window_offset``/``window_stride`` in ``map_dfg``). The first worker to
+  finish with a mapping sets the stop event; the rest observe it at their
+  next budget check and return their best-so-far (*first-winner
+  cancellation*). The lowest II among the returned results wins.
+
+Both layers reuse the round/budget logic of ``map_dfg`` unchanged — workers
+run the ordinary portfolio search, just on a subset of windows — and both
+share work across runs through the persistent disk cache (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import os
+import time as _time
+from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from ..cgra import CGRA
+from ..dfg import DFG
+from ..mapper import MapResult, map_dfg
+
+# Worker-side stop event, installed by the pool initializer. Lives in a
+# module global because multiprocessing primitives can only be inherited at
+# process creation, not pickled per task.
+_STOP_EVENT = None
+
+
+def _pool_init(stop_event) -> None:
+    global _STOP_EVENT
+    _STOP_EVENT = stop_event
+
+
+def _should_stop():
+    ev = _STOP_EVENT
+    return None if ev is None else ev.is_set
+
+
+# ------------------------------------------------------------------- jobs
+
+@dataclass
+class CompileJob:
+    """One unit of batch work: a DFG, a target CGRA, per-job overrides.
+
+    ``options`` is forwarded to :func:`repro.core.mapper.map_dfg` verbatim
+    (e.g. ``{"max_slack": 2, "max_register_pressure": 8}``) and wins over the
+    batch-level defaults.
+    """
+
+    dfg: DFG
+    cgra: CGRA
+    name: str = ""
+    options: dict = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            self.name = self.dfg.name
+
+
+@dataclass
+class JobReport:
+    """Per-job outcome row of a :class:`CompileReport` (JSON-friendly)."""
+
+    name: str
+    ok: bool
+    ii: int | None
+    m_ii: int
+    wall_s: float
+    cache_hit: bool = False
+    disk_cache_hit: bool = False
+    backend: str = ""
+    reason: str = ""
+    cancelled: bool = False
+    time_phase_s: float = 0.0
+    space_phase_s: float = 0.0
+    mono_failures: int = 0
+
+    @property
+    def solved(self) -> bool:
+        """True when the mapper actually searched (neither cache layer hit)."""
+        return self.ok and not (self.cache_hit or self.disk_cache_hit)
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "ok": self.ok,
+            "ii": self.ii,
+            "mII": self.m_ii,
+            "wall_s": round(self.wall_s, 4),
+            "cache_hit": self.cache_hit,
+            "disk_cache_hit": self.disk_cache_hit,
+            "backend": self.backend,
+            "reason": self.reason,
+            "cancelled": self.cancelled,
+            "time_phase_s": round(self.time_phase_s, 4),
+            "space_phase_s": round(self.space_phase_s, 4),
+            "mono_failures": self.mono_failures,
+        }
+
+
+@dataclass
+class CompileReport:
+    """Batch outcome: per-job rows + aggregate cache/wall counters."""
+
+    jobs: list[JobReport]
+    wall_s: float
+    num_workers: int
+
+    @property
+    def ok(self) -> bool:
+        return all(j.ok for j in self.jobs)
+
+    @property
+    def cache_counters(self) -> dict:
+        return {
+            "memory_hits": sum(j.cache_hit for j in self.jobs),
+            "disk_hits": sum(j.disk_cache_hit for j in self.jobs),
+            "solved": sum(j.solved for j in self.jobs),
+            "failed": sum(not j.ok for j in self.jobs),
+        }
+
+    def as_dict(self) -> dict:
+        return {
+            "wall_s": round(self.wall_s, 4),
+            "num_workers": self.num_workers,
+            "ok": self.ok,
+            "cache": self.cache_counters,
+            "jobs": [j.as_dict() for j in self.jobs],
+        }
+
+
+def _job_report(job: CompileJob, res: MapResult, wall_s: float) -> JobReport:
+    return JobReport(
+        name=job.name,
+        ok=res.ok,
+        ii=res.mapping.ii if res.ok else None,
+        m_ii=res.stats.m_ii,
+        wall_s=wall_s,
+        cache_hit=res.stats.cache_hit,
+        disk_cache_hit=res.stats.disk_cache_hit,
+        backend=res.stats.backend,
+        reason=res.reason,
+        time_phase_s=res.stats.time_phase_s,
+        space_phase_s=res.stats.space_phase_s,
+        mono_failures=res.stats.mono_failures,
+    )
+
+
+def _cancelled_report(job: CompileJob, reason: str) -> JobReport:
+    return JobReport(
+        name=job.name, ok=False, ii=None, m_ii=-1, wall_s=0.0,
+        reason=reason, cancelled=True,
+    )
+
+
+def _run_job(job: CompileJob, defaults: dict, stop=None) -> JobReport:
+    """Run one job and build its report; shared by the inline and pool paths.
+
+    ``stop`` is a zero-arg cancellation predicate (or None). In pool workers
+    it is derived from the inherited stop event (:func:`_run_job_pooled`); in
+    the inline path it is the caller's ``cancel.is_set``.
+    """
+    opts = {**defaults, **job.options}
+    if stop is not None:
+        if stop():
+            return _cancelled_report(job, "cancelled before start")
+        opts.setdefault("should_stop", stop)
+    t0 = _time.perf_counter()
+    try:
+        res = map_dfg(job.dfg, job.cgra, **opts)
+    except Exception as exc:
+        # any per-job failure (bad DFG, incompatible options, cache I/O)
+        # fails its own row, never the batch
+        return JobReport(name=job.name, ok=False, ii=None, m_ii=-1,
+                         wall_s=_time.perf_counter() - t0,
+                         reason=f"{type(exc).__name__}: {exc}")
+    rep = _job_report(job, res, _time.perf_counter() - t0)
+    if not res.ok and stop is not None and stop():
+        rep.cancelled = True
+        rep.reason = rep.reason or "cancelled"
+    return rep
+
+
+def _run_job_pooled(job: CompileJob, defaults: dict) -> JobReport:
+    """Top-level (picklable) pool entry: binds the inherited stop event."""
+    return _run_job(job, defaults, stop=_should_stop())
+
+
+def compile_many(
+    batch: Sequence[CompileJob],
+    *,
+    jobs: int | None = None,
+    deadline_s: float | None = None,
+    deterministic: bool = False,
+    cache_dir: str | None = None,
+    use_cache: bool = True,
+    cancel=None,
+    map_options: dict | None = None,
+) -> CompileReport:
+    """Compile a batch of DFGs concurrently across a process pool.
+
+    Example — compile the Table III suite on a 5×5 CGRA with 4 workers and a
+    warm persistent cache::
+
+        from repro.core import CGRA
+        from repro.core.benchsuite import load_suite
+        from repro.core.service import CompileJob, compile_many
+
+        cgra = CGRA(5, 5)
+        batch = [CompileJob(d, cgra) for d in load_suite().values()]
+        report = compile_many(batch, jobs=4, cache_dir="/tmp/maps")
+        assert report.ok
+        # second run: every job is a disk/memory hit, no solving
+        again = compile_many(batch, jobs=4, cache_dir="/tmp/maps")
+        assert again.cache_counters["solved"] == 0
+
+    Parameters:
+
+    * ``jobs`` — worker processes (default ``os.cpu_count()``). ``jobs<=1``
+      runs inline in this process: no pool, bit-identical to a hand loop —
+      the mode CI's deterministic smoke exercises.
+    * ``deadline_s`` — per-job wall budget, enforced *inside* the worker as
+      the mapper's ``time_budget_s`` (a job that exceeds it returns its best
+      mapping so far or a budget-exhausted failure; the pool is never killed).
+      Ignored when ``deterministic`` (step budgets replace wall clocks).
+    * ``deterministic`` — forward ``deterministic=True`` to every job: each
+      job's result is then load- and schedule-independent, so the batch
+      report is reproducible regardless of pool interleaving.
+    * ``cache_dir`` — persistent mapping cache directory shared by all
+      workers (DESIGN.md §9); defaults to ``$REPRO_CACHE_DIR`` when set.
+    * ``cancel`` — optional ``threading.Event``-like object; once set, queued
+      jobs are dropped and running jobs finish early at their next budget
+      check, reported with ``cancelled=True``.
+    * ``map_options`` — extra ``map_dfg`` kwargs applied to every job
+      (overridden by each job's own ``options``).
+    """
+    t0 = _time.perf_counter()
+    defaults: dict = dict(map_options or {})
+    defaults.setdefault("use_cache", use_cache)
+    defaults.setdefault("cache_dir", cache_dir)
+    if deterministic:
+        defaults.setdefault("deterministic", True)
+    elif deadline_s is not None:
+        defaults.setdefault("time_budget_s", deadline_s)
+
+    num_workers = jobs if jobs is not None else (os.cpu_count() or 1)
+    if num_workers <= 1 or len(batch) <= 1:
+        stop = cancel.is_set if cancel is not None else None
+        reports = [_run_job(job, defaults, stop=stop) for job in batch]
+        return CompileReport(reports, _time.perf_counter() - t0, 1)
+
+    import multiprocessing as mp
+
+    ctx = mp.get_context()
+    stop_event = ctx.Event()
+    reports_by_idx: dict[int, JobReport] = {}
+    with ProcessPoolExecutor(
+        max_workers=min(num_workers, len(batch)),
+        mp_context=ctx,
+        initializer=_pool_init,
+        initargs=(stop_event,),
+    ) as pool:
+        futures = {pool.submit(_run_job_pooled, job, defaults): i
+                   for i, job in enumerate(batch)}
+        pending = set(futures)
+        # poll only when there is a cancel event to observe; block otherwise
+        poll_s = 0.1 if cancel is not None else None
+        while pending:
+            done, pending = wait(pending, timeout=poll_s,
+                                 return_when=FIRST_COMPLETED)
+            for fut in done:
+                i = futures[fut]
+                if fut.cancelled():
+                    reports_by_idx[i] = _cancelled_report(
+                        batch[i], "cancelled before start")
+                    continue
+                try:
+                    reports_by_idx[i] = fut.result()
+                except Exception as exc:
+                    # worker death (BrokenProcessPool after an OOM kill,
+                    # pickling failure, ...) fails this row, not the batch
+                    reports_by_idx[i] = JobReport(
+                        name=batch[i].name, ok=False, ii=None, m_ii=-1,
+                        wall_s=0.0, reason=f"{type(exc).__name__}: {exc}")
+            if cancel is not None and cancel.is_set() and not stop_event.is_set():
+                stop_event.set()
+                for fut in list(pending):
+                    if fut.cancel():
+                        i = futures[fut]
+                        reports_by_idx[i] = _cancelled_report(
+                            batch[i], "cancelled before start")
+                        pending.discard(fut)
+    reports = [reports_by_idx[i] for i in range(len(batch))]
+    return CompileReport(reports, _time.perf_counter() - t0,
+                         min(num_workers, len(batch)))
+
+
+# ----------------------------------------------------------- window racing
+
+def _race_worker(dfg: DFG, cgra: CGRA, offset: int, stride: int,
+                 options: dict) -> MapResult:
+    opts = dict(options)
+    stop = _should_stop()
+    if stop is not None:
+        opts.setdefault("should_stop", stop)
+    res = map_dfg(dfg, cgra, window_offset=offset, window_stride=stride, **opts)
+    if res.ok and _STOP_EVENT is not None:
+        _STOP_EVENT.set()       # first winner: laggards wrap up at next check
+    return res
+
+
+def map_dfg_racing(
+    dfg: DFG,
+    cgra: CGRA,
+    *,
+    workers: int = 2,
+    **options,
+) -> MapResult:
+    """Race one mapping problem's (II, slack) windows across processes.
+
+    Worker ``i`` of ``w`` runs the ordinary portfolio search restricted to
+    every ``w``-th window (``window_offset=i, window_stride=w``) of the
+    canonical smallest-II-first order, so the workers partition the search
+    space instead of duplicating it. The first worker that returns a mapping
+    sets the shared stop event (*first-winner cancellation*); the others
+    observe it at their next budget check and return early. The best
+    (lowest-II) result wins — with ties broken toward the lowest offset so
+    the choice is reproducible.
+
+    ``workers`` is clamped to the window count (no worker gets an empty
+    stripe); ``workers<=1`` after clamping, or ``deterministic=True`` (whose
+    contract a wall-clock race cannot honor), falls back to plain
+    :func:`~repro.core.mapper.map_dfg`. Remaining keyword ``options`` are
+    forwarded to ``map_dfg`` unchanged.
+    """
+    from ..mapper import DEFAULT_MAX_SLACK, default_max_ii, ii_slack_windows
+    from ..schedule import min_ii
+
+    lo = min_ii(dfg, cgra)
+    hi = options.get("max_ii") or default_max_ii(lo)
+    n_windows = sum(
+        1 for _ in ii_slack_windows(
+            lo, hi, options.get("max_slack", DEFAULT_MAX_SLACK))
+    )
+    workers = min(workers, max(1, n_windows))
+    if workers <= 1 or options.get("deterministic"):
+        return map_dfg(dfg, cgra, **options)
+
+    import multiprocessing as mp
+
+    t0 = _time.perf_counter()
+    ctx = mp.get_context()
+    stop_event = ctx.Event()
+    with ProcessPoolExecutor(
+        max_workers=workers,
+        mp_context=ctx,
+        initializer=_pool_init,
+        initargs=(stop_event,),
+    ) as pool:
+        futs = [
+            pool.submit(_race_worker, dfg, cgra, i, workers, options)
+            for i in range(workers)
+        ]
+        results = [f.result() for f in futs]
+    winners = [(r.mapping.ii, i) for i, r in enumerate(results) if r.ok]
+    wall = _time.perf_counter() - t0
+    if not winners:
+        # deterministic pick among failures: the offset-0 stripe holds the
+        # lowest-II windows, so its reason is the most informative
+        res = results[0]
+        res.stats.total_s = wall
+        return res
+    _, best_i = min(winners)
+    res = results[best_i]
+    res.stats.total_s = wall
+    return res

@@ -83,13 +83,30 @@ class TimeSolverStats:
 
 
 class TimeSolver:
-    """Enumerates time solutions for (dfg, cgra, II) lazily.
+    """Lazily enumerates time solutions for one (dfg, cgra, II, slack) window.
 
-    ``next_solution()`` returns a fresh TimeSolution each call — each with a
-    label partition never proposed before — or None when either the per-call
-    budget ran out (``solver.exhausted`` False: call again to resume) or the
-    space is proven empty (``solver.exhausted`` True). The mapper uses this to
-    recover from monomorphism failures.
+    ``next_solution()`` returns a fresh :class:`TimeSolution` each call — each
+    with a *label partition* (the multiset of kernel steps ``t mod II``) never
+    proposed before — or None when either the per-call budget ran out
+    (``solver.exhausted`` False: call again to resume) or the window is proven
+    empty (``solver.exhausted`` True). The portfolio mapper uses this to
+    recover from monomorphism failures: a partition that failed to embed is
+    never re-proposed (DESIGN.md §4), and ``block(labels)`` excludes one
+    externally (e.g. on a register-pressure reject).
+
+    Example — enumerate two distinct partitions for the running example::
+
+        from repro.core import CGRA, TimeSolver, running_example
+
+        solver = TimeSolver(running_example(), CGRA(2, 2), ii=4, backend="cp")
+        a = solver.next_solution()
+        b = solver.next_solution()
+        assert sorted(a.labels) != sorted(b.labels) or a.labels != b.labels
+        assert max(a.folds) >= 1        # 14 nodes fold over 4 kernel steps
+
+    Raises ``ValueError`` at construction when the window is infeasible by
+    analytic precheck (modulo-window collapse, degree/supply bounds) — a free
+    UNSAT proof the mapper consumes to mark the window dead (DESIGN.md §3).
     """
 
     def __init__(

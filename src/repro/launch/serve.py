@@ -7,6 +7,13 @@ full or --reduced.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 16 --batch 4 --prompt-len 32 --gen 16
+
+``--premap-kernels SIZE`` warms the node before serving: the CGRA kernel
+suite is batch-compiled onto a SIZE×SIZE grid through the compilation
+service (``repro.core.service.compile_many``), against the persistent
+mapping cache (``--cache-dir`` / ``$REPRO_CACHE_DIR``). A warm restart then
+boots without re-solving a single mapping — the production pattern the
+service layer exists for (DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -44,6 +51,23 @@ def serve_batch(spec, params, prompts: np.ndarray, gen: int, cache_len: int):
     return np.concatenate(out, axis=1)
 
 
+def premap_kernels(size: int, jobs: int, cache_dir: str | None) -> None:
+    """Boot-time warm-up: batch-map the kernel suite via the compile service."""
+    from repro.core.cgra import CGRA
+    from repro.core.benchsuite import load_suite
+    from repro.core.service import CompileJob, compile_many
+
+    cgra = CGRA(size, size)
+    batch = [CompileJob(dfg, cgra) for dfg in load_suite().values()]
+    report = compile_many(batch, jobs=jobs, deadline_s=30, cache_dir=cache_dir)
+    c = report.cache_counters
+    print(
+        f"premap: {len(batch)} kernels on {cgra} in {report.wall_s:.2f}s "
+        f"({report.num_workers} workers) — {c['solved']} solved, "
+        f"{c['memory_hits'] + c['disk_hits']} cache hits, {c['failed']} failed"
+    )
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -53,7 +77,21 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--premap-kernels", type=int, default=0, metavar="SIZE",
+        help="before serving, batch-compile the CGRA kernel suite onto a "
+             "SIZE×SIZE grid (0 = skip)",
+    )
+    ap.add_argument("--premap-jobs", type=int, default=2)
+    ap.add_argument(
+        "--cache-dir", default=None,
+        help="persistent mapping cache for --premap-kernels "
+             "(default: $REPRO_CACHE_DIR)",
+    )
     args = ap.parse_args(argv)
+
+    if args.premap_kernels:
+        premap_kernels(args.premap_kernels, args.premap_jobs, args.cache_dir)
 
     cfg = get_config(args.arch)
     if args.reduced:

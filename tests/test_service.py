@@ -1,0 +1,330 @@
+"""Compilation-service tests (DESIGN.md §8–§9): persistent mapping cache
+(hit/miss, cross-process reuse, version-bump invalidation, corruption
+tolerance), the process-pool batch compiler, window striping/racing, and the
+``python -m repro.compile`` CLI."""
+
+import glob
+import json
+import os
+import threading
+
+import pytest
+
+from repro.core import CGRA, map_dfg, running_example
+from repro.core.benchsuite import load_suite
+from repro.core.mapper import clear_mapping_cache, ii_slack_windows
+from repro.core.service import (
+    CACHE_VERSION,
+    CompileJob,
+    DiskMappingCache,
+    compile_many,
+    map_dfg_racing,
+    resolve_cache_dir,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memory_cache():
+    clear_mapping_cache()
+    yield
+    clear_mapping_cache()
+
+
+def _small_jobs(cgra=None, names=("bitcount", "fft")):
+    cgra = cgra or CGRA(4, 4)
+    suite = load_suite(names=list(names))
+    return [CompileJob(dfg, cgra) for dfg in suite.values()]
+
+
+# ------------------------------------------------------------- disk cache
+
+def test_disk_cache_miss_then_hit(tmp_path):
+    dfg, cgra = running_example(), CGRA(2, 2)
+    cold = map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30)
+    assert cold.ok and not cold.stats.disk_cache_hit
+    assert len(DiskMappingCache(str(tmp_path))) == 1
+
+    clear_mapping_cache()       # force the lookup past the in-memory layer
+    warm = map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30)
+    assert warm.ok and warm.stats.disk_cache_hit
+    assert warm.stats.backend == "disk-cache"
+    assert warm.mapping.ii == cold.mapping.ii
+    assert warm.mapping.validate() == []
+
+    # the disk hit was promoted into memory: next lookup never touches disk
+    hot = map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30)
+    assert hot.stats.cache_hit and not hot.stats.disk_cache_hit
+
+
+def test_disk_cache_key_separates_targets(tmp_path):
+    dfg = running_example()
+    a = map_dfg(dfg, CGRA(2, 2), cache_dir=str(tmp_path), time_budget_s=30)
+    assert a.ok
+    clear_mapping_cache()
+    # same DFG, different grid: must miss (and solve) rather than reuse
+    b = map_dfg(dfg, CGRA(3, 3), cache_dir=str(tmp_path), time_budget_s=30)
+    assert b.ok and not b.stats.disk_cache_hit and not b.stats.cache_hit
+
+
+def test_disk_cache_version_bump_invalidates(tmp_path, monkeypatch):
+    dfg, cgra = running_example(), CGRA(2, 2)
+    assert map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30).ok
+    clear_mapping_cache()
+
+    import repro.core.service.cache as cache_mod
+
+    monkeypatch.setattr(cache_mod, "CACHE_VERSION", CACHE_VERSION + 1)
+    bumped = map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30)
+    assert bumped.ok and not bumped.stats.disk_cache_hit   # orphaned entry
+
+    # prune() under the new version reclaims the orphaned entry
+    store = DiskMappingCache(str(tmp_path))
+    assert store.prune() == 1
+    assert len(store) == 1      # the re-solved entry written under v+1
+
+
+def test_disk_cache_tolerates_corrupt_and_truncated_files(tmp_path):
+    dfg, cgra = running_example(), CGRA(2, 2)
+    assert map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30).ok
+    (entry,) = glob.glob(str(tmp_path / "*" / "*.json"))
+
+    for garbage in ["", '{"version": 1, "tru', '{"version": 1}', "[]"]:
+        with open(entry, "w") as f:
+            f.write(garbage)
+        clear_mapping_cache()
+        res = map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30)
+        assert res.ok and not res.stats.disk_cache_hit   # corrupt => miss
+        # the bad file was dropped and replaced by the fresh solve's entry
+        clear_mapping_cache()
+        hit = map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30)
+        assert hit.ok and hit.stats.disk_cache_hit
+
+
+def test_disk_cache_drops_semantically_invalid_entry(tmp_path):
+    """A schema-valid entry whose mapping fails validation is deleted, not
+    re-read (and re-rejected) on every cold lookup forever."""
+    dfg, cgra = running_example(), CGRA(2, 2)
+    assert map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30).ok
+    (entry,) = glob.glob(str(tmp_path / "*" / "*.json"))
+    payload = json.load(open(entry))
+    payload["placement"] = [0] * len(payload["placement"])   # breaks mono1
+    with open(entry, "w") as f:
+        json.dump(payload, f)
+
+    clear_mapping_cache()
+    res = map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30)
+    assert res.ok and not res.stats.disk_cache_hit
+    assert res.mapping.validate() == []
+    # the poisoned entry was dropped and the path now holds the fresh solve
+    # (same content address), which serves the next cold lookup
+    assert json.load(open(entry))["placement"] != payload["placement"]
+    clear_mapping_cache()
+    again = map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30)
+    assert again.ok and again.stats.disk_cache_hit
+
+
+def test_disk_cache_stats_counters(tmp_path):
+    store = DiskMappingCache(str(tmp_path))
+    key = store.entry_key("abc", 2, 2, "mesh", "strict", None)
+    assert store.get(key, 1, 3) is None
+    assert store.stats.misses == 1
+    store.put(key, 2, [0, 1], [0, 1])
+    assert store.stats.writes == 1
+    assert store.get(key, 1, 3) == (2, [0, 1], [0, 1])
+    assert store.stats.hits == 1
+
+
+def test_resolve_cache_dir_precedence(monkeypatch):
+    monkeypatch.delenv("REPRO_CACHE_DIR", raising=False)
+    assert resolve_cache_dir(None) is None
+    assert resolve_cache_dir("/x") == "/x"
+    monkeypatch.setenv("REPRO_CACHE_DIR", "/env")
+    assert resolve_cache_dir(None) == "/env"
+    assert resolve_cache_dir("/x") == "/x"
+    assert resolve_cache_dir("") is None        # explicit disable
+    monkeypatch.setenv("REPRO_CACHE_DIR", "")
+    assert resolve_cache_dir(None) is None
+
+
+def test_deterministic_mode_bypasses_disk_cache(tmp_path):
+    dfg, cgra = running_example(), CGRA(2, 2)
+    assert map_dfg(dfg, cgra, cache_dir=str(tmp_path), time_budget_s=30).ok
+    clear_mapping_cache()
+    det = map_dfg(dfg, cgra, cache_dir=str(tmp_path), deterministic=True)
+    assert det.ok and not det.stats.disk_cache_hit and not det.stats.cache_hit
+
+
+# ----------------------------------------------------------- batch compiler
+
+def test_compile_many_sequential_matches_map_dfg():
+    batch = _small_jobs()
+    report = compile_many(batch, jobs=1, deterministic=True)
+    assert report.ok and report.num_workers == 1
+    for job, rep in zip(batch, report.jobs):
+        direct = map_dfg(job.dfg, job.cgra, deterministic=True)
+        assert rep.ii == direct.mapping.ii
+        assert rep.m_ii == direct.stats.m_ii
+
+
+def test_compile_many_deterministic_smoke_is_reproducible():
+    batch = _small_jobs(names=("bitcount", "fft", "gsm"))
+    a = compile_many(batch, jobs=1, deterministic=True)
+    b = compile_many(batch, jobs=1, deterministic=True)
+    assert [j.ii for j in a.jobs] == [j.ii for j in b.jobs]
+    assert all(not j.cache_hit and not j.disk_cache_hit for j in b.jobs)
+
+
+def test_compile_many_process_pool_and_cross_process_cache(tmp_path):
+    batch = _small_jobs(names=("bitcount", "fft", "gsm"))
+    cold = compile_many(batch, jobs=2, cache_dir=str(tmp_path), deadline_s=30)
+    assert cold.ok
+    assert cold.cache_counters["solved"] == 3
+    # entries were written by *worker* processes; this process and a fresh
+    # pool both read them back — cross-process reuse in both directions
+    clear_mapping_cache()
+    warm = compile_many(batch, jobs=2, cache_dir=str(tmp_path), deadline_s=30)
+    assert warm.ok
+    assert warm.cache_counters["solved"] == 0
+    assert warm.cache_counters["disk_hits"] == 3
+    assert [j.ii for j in warm.jobs] == [j.ii for j in cold.jobs]
+    # (no wall-clock comparison: these few-ms solves are dominated by pool
+    # startup; the counters above are the semantic assertion)
+
+
+def test_compile_many_reports_failures_without_raising():
+    # 1x1 grid cannot hold a 2-node same-step structure: jobs must fail
+    # gracefully with ok=False rows, not exceptions
+    suite = load_suite(names=["bitcount"])
+    batch = [CompileJob(suite["bitcount"], CGRA(1, 1),
+                        options={"max_ii": 4})]
+    report = compile_many(batch, jobs=1, deadline_s=5)
+    assert not report.ok
+    assert report.jobs[0].reason
+    assert report.cache_counters["failed"] == 1
+
+
+def test_compile_many_cancellation():
+    cancel = threading.Event()
+    cancel.set()        # cancelled before anything starts
+    batch = _small_jobs(names=("bitcount", "fft"))
+    report = compile_many(batch, jobs=1, cancel=cancel)
+    assert not report.ok
+    assert all(j.cancelled for j in report.jobs)
+
+
+def test_compile_many_per_job_options_override():
+    suite = load_suite(names=["bitcount"])
+    job = CompileJob(suite["bitcount"], CGRA(4, 4),
+                     options={"deterministic": True})
+    report = compile_many([job], jobs=1, deadline_s=30)
+    assert report.ok and report.jobs[0].backend == "cp-inc"
+
+
+# ------------------------------------------------------ striping and racing
+
+def test_window_striping_partitions_the_sweep():
+    dfg, cgra = running_example(), CGRA(2, 2)
+    full = map_dfg(dfg, cgra, deterministic=True)
+    assert full.ok
+    # the union of striped sweeps covers every window exactly once
+    stride = 3
+    results = [
+        map_dfg(dfg, cgra, deterministic=True, window_offset=off,
+                window_stride=stride)
+        for off in range(stride)
+    ]
+    best = min((r.mapping.ii for r in results if r.ok), default=None)
+    assert best == full.mapping.ii      # some stripe holds the best window
+    windows = list(ii_slack_windows(4, 8, 3))
+    striped = [w for off in range(stride) for i, w in enumerate(windows)
+               if i % stride == off]
+    assert sorted(striped) == sorted(windows)
+
+
+def test_window_striping_validation():
+    with pytest.raises(ValueError):
+        map_dfg(running_example(), CGRA(2, 2), window_stride=0)
+    with pytest.raises(ValueError):
+        map_dfg(running_example(), CGRA(2, 2), window_offset=2,
+                window_stride=2)
+
+
+def test_should_stop_finishes_early():
+    calls = {"n": 0}
+
+    def stop():
+        calls["n"] += 1
+        return calls["n"] > 3       # let the search open, then cancel
+
+    res = map_dfg(load_suite(names=["aes"])["aes"], CGRA(5, 5),
+                  should_stop=stop, use_cache=False, time_budget_s=60)
+    # cancelled long before the 60s budget; best-so-far (or clean failure)
+    assert res.stats.total_s < 30
+
+
+def test_map_dfg_racing_smoke():
+    suite = load_suite(names=["fft"])
+    res = map_dfg_racing(suite["fft"], CGRA(4, 4), workers=2,
+                         use_cache=False, time_budget_s=30)
+    assert res.ok
+    assert res.mapping.validate() == []
+    direct = map_dfg(suite["fft"], CGRA(4, 4), use_cache=False,
+                     time_budget_s=30)
+    assert res.mapping.ii == direct.mapping.ii
+
+
+def test_map_dfg_racing_falls_back_when_deterministic():
+    res = map_dfg_racing(running_example(), CGRA(2, 2), workers=4,
+                         deterministic=True)
+    assert res.ok and res.mapping.ii == 4
+
+
+@pytest.mark.skipif((os.cpu_count() or 1) < 4,
+                    reason="speedup assertion needs >=4 cores")
+def test_compile_many_parallel_speedup(tmp_path):
+    names = ["aes", "backprop", "crc32", "particlefilter", "sha2", "susan"]
+    cgra = CGRA(5, 5)
+    suite = load_suite(names=names)
+    batch = [CompileJob(d, cgra) for d in suite.values()]
+    seq = compile_many(batch, jobs=1, use_cache=False, deadline_s=30)
+    clear_mapping_cache()
+    par = compile_many(batch, jobs=4, use_cache=False, deadline_s=30)
+    assert par.ok and seq.ok
+    assert [j.ii for j in par.jobs] == [j.ii for j in seq.jobs]
+    assert par.wall_s <= 0.5 * seq.wall_s + 1.0
+
+
+# -------------------------------------------------------------------- CLI
+
+def test_cli_report_and_cache_counters(tmp_path):
+    from repro.compile import main
+
+    report_path = tmp_path / "report.json"
+    cache_dir = tmp_path / "cache"
+    argv = ["--bench", "bitcount", "--bench", "fft", "--size", "4",
+            "--jobs", "1", "--cache-dir", str(cache_dir),
+            "--report", str(report_path), "--quiet"]
+    assert main(argv) == 0
+    cold = json.loads(report_path.read_text())
+    assert cold["ok"] and cold["cache"]["solved"] == 2
+
+    clear_mapping_cache()
+    assert main(argv) == 0
+    warm = json.loads(report_path.read_text())
+    assert warm["ok"]
+    assert warm["cache"]["solved"] == 0
+    assert warm["cache"]["disk_hits"] == 2
+    assert [j["ii"] for j in warm["jobs"]] == [j["ii"] for j in cold["jobs"]]
+
+
+def test_cli_requires_a_workload(capsys):
+    from repro.compile import main
+
+    assert main([]) == 2
+
+
+def test_cli_deterministic_exit_codes(tmp_path):
+    from repro.compile import main
+
+    assert main(["--bench", "bitcount", "--size", "4", "--jobs", "1",
+                 "--deterministic", "--quiet"]) == 0

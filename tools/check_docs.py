@@ -1,0 +1,99 @@
+"""Markdown link checker for the CI docs job (no third-party deps).
+
+Checks, for every markdown file given on the command line:
+
+* relative links `[text](path)` and `[text](path#anchor)` resolve to an
+  existing file/directory (anchors are checked against the target's
+  headings, GitHub-style slugs);
+* intra-document anchors `[text](#anchor)` match a heading;
+* section references like "DESIGN.md §8" name a section that exists in
+  DESIGN.md (keeps prose citations honest, not just hyperlinks).
+
+External (http/https/mailto) links are not fetched — CI must not depend on
+the network.
+
+Usage: python tools/check_docs.py README.md DESIGN.md CHANGES.md
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+SECTION_REF_RE = re.compile(r"(\w[\w.]*\.md)\s+§(\d+)")
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\s§-]", "", s, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", s).strip("-")
+
+
+def headings_of(path: str) -> list[str]:
+    with open(path, "r", encoding="utf-8") as f:
+        text = CODE_FENCE_RE.sub("", f.read())
+    return [m.group(1).strip() for m in HEADING_RE.finditer(text)]
+
+
+def check_file(path: str) -> list[str]:
+    errs: list[str] = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, "r", encoding="utf-8") as f:
+        raw = f.read()
+    text = CODE_FENCE_RE.sub("", raw)
+
+    own_slugs = {github_slug(h) for h in headings_of(path)}
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if target[1:] not in own_slugs:
+                errs.append(f"{path}: dangling anchor {target}")
+            continue
+        rel, _, anchor = target.partition("#")
+        full = os.path.normpath(os.path.join(base, rel))
+        if not os.path.exists(full):
+            errs.append(f"{path}: broken link {target} -> {full}")
+            continue
+        if anchor:
+            slugs = {github_slug(h) for h in headings_of(full)}
+            if anchor not in slugs:
+                errs.append(f"{path}: dangling anchor {target}")
+
+    for m in SECTION_REF_RE.finditer(text):
+        doc, sec = m.group(1), m.group(2)
+        full = os.path.normpath(os.path.join(base, doc))
+        if not os.path.exists(full):
+            errs.append(f"{path}: section reference to missing file {doc}")
+            continue
+        pattern = re.compile(rf"^#{{1,6}}\s+§{sec}\b", re.MULTILINE)
+        with open(full, "r", encoding="utf-8") as f:
+            if not pattern.search(f.read()):
+                errs.append(f"{path}: {doc} §{sec} not found")
+    return errs
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_docs.py FILE.md [FILE.md ...]", file=sys.stderr)
+        return 2
+    errors: list[str] = []
+    for path in argv:
+        if not os.path.exists(path):
+            errors.append(f"missing file: {path}")
+            continue
+        errors.extend(check_file(path))
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs OK: {len(argv)} files checked")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
