@@ -1,0 +1,70 @@
+"""Heterogeneous-architecture benchmark leg (DESIGN.md §10).
+
+Maps the full 17-kernel Table III suite onto a named heterogeneous preset
+(default: SAT-MapIt-style ``satmapit_edge_mem_4x4`` — memory only on border
+PEs, 4 ports) and *independently verifies* every mapping by cycle-accurate
+execution: ``execute_mapping``'s capability and memory-port assertions fire
+on any op placed on an incapable PE, so a passing run certifies placement
+legality beyond the mapper's own bookkeeping.
+
+Emits ``BENCH_hetero.json`` so CI can gate II/wall-time regressions on
+non-homogeneous targets, mirroring ``BENCH_table3.json`` for the paper grid.
+"""
+
+from __future__ import annotations
+
+from repro.core.arch import resolve_arch
+from repro.core.benchsuite import load_suite
+from repro.core.mapper import map_dfg
+from repro.core.simulate import check_equivalence
+
+
+def run(
+    *,
+    arch: str = "satmapit_edge_mem_4x4",
+    budget_s: float = 60.0,
+    benchmarks=None,
+    cache_dir: str | None = None,
+) -> dict:
+    spec = resolve_arch(arch)
+    cgra = spec.cgra()
+    suite = load_suite(names=benchmarks)
+    rows = []
+    for name, dfg in suite.items():
+        problems = spec.validate_for(dfg)
+        res = None
+        if not problems:
+            res = map_dfg(dfg, cgra, time_budget_s=budget_s,
+                          cache_dir=cache_dir)
+        row = {
+            "bench": name,
+            "nodes": dfg.num_nodes,
+            "arch": spec.name,
+            "mII": res.stats.m_ii if res else None,
+            "II": res.mapping.ii if res and res.ok else None,
+            "wall_s": round(res.stats.total_s, 6) if res else 0.0,
+            "cache_hit": bool(res and (res.stats.cache_hit
+                                       or res.stats.disk_cache_hit)),
+            "ok": bool(res and res.ok),
+            "verified": False,
+            "reason": "; ".join(problems) if problems else (res.reason if res else ""),
+        }
+        if res and res.ok:
+            # the oracle raises on capability/port/routing/timing violations;
+            # a clean pass is the independent placement-legality certificate.
+            # A failure must land in the artifact (verified=False drives the
+            # CI gate), not abort the sweep and lose the other rows.
+            try:
+                check_equivalence(res.mapping)
+                row["verified"] = True
+            except AssertionError as exc:
+                row["reason"] = f"verification failed: {exc}"
+        rows.append(row)
+        print(row, flush=True)
+    return {
+        "arch": {"name": spec.name, "spec_hash": spec.spec_hash(),
+                 "rows": spec.rows, "cols": spec.cols,
+                 "topology": spec.topology, "mem_ports": spec.mem_ports},
+        "ok": all(r["ok"] and r["verified"] for r in rows),
+        "rows": rows,
+    }

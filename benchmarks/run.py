@@ -3,6 +3,8 @@
   table3   — II + compile time, decoupled vs joint mapper (paper Tab. III)
   fig5     — compile time vs CGRA size for `aes` (paper Fig. 5)
   kernels  — Pallas kernel micro-benchmarks
+  hetero   — the suite on a heterogeneous arch preset (--arch), with
+             execute_mapping capability verification (DESIGN.md §10)
 
 Each section also emits a ``BENCH_<name>.json`` artifact (consumed by CI and
 by the Fig. 5 near-flat acceptance gate) and prints a
@@ -31,7 +33,11 @@ def main(argv=None) -> None:
         help="CI job: quick subset, no joint baseline, JSON artifacts only",
     )
     ap.add_argument("--skip-joint", action="store_true")
-    ap.add_argument("--only", choices=["table3", "fig5", "kernels"])
+    ap.add_argument("--only", choices=["table3", "fig5", "kernels", "hetero"])
+    ap.add_argument(
+        "--arch", default="satmapit_edge_mem_4x4",
+        help="heterogeneous preset or ArchSpec JSON for the hetero section",
+    )
     ap.add_argument(
         "--jobs", type=int, default=1,
         help="worker processes for the table3 sweep (>1 routes through "
@@ -47,7 +53,7 @@ def main(argv=None) -> None:
         args.quick = True
         args.skip_joint = True
 
-    from benchmarks import bench_fig5, bench_kernels, bench_table3
+    from benchmarks import bench_fig5, bench_hetero, bench_kernels, bench_table3
 
     csv_rows: list[tuple[str, float, str]] = []
 
@@ -91,6 +97,23 @@ def main(argv=None) -> None:
                     f"fig5_aes_{r['size']}x{r['size']}",
                     r["ours_time_s"] * 1e6,
                     f"joint_s={r.get('joint_time_s', '')}",
+                )
+            )
+
+    if args.only in (None, "hetero"):
+        kw = dict(arch=args.arch, cache_dir=args.cache_dir)
+        if args.quick:
+            kw.update(budget_s=20,
+                      benchmarks=["bitcount", "fft", "gsm", "susan", "aes"])
+        hrep = bench_hetero.run(**kw)
+        with open("BENCH_hetero.json", "w") as f:
+            json.dump(hrep, f, indent=2)
+        for r in hrep["rows"]:
+            csv_rows.append(
+                (
+                    f"hetero_{r['bench']}_{r['arch']}",
+                    r["wall_s"] * 1e6,
+                    f"II={r['II']};mII={r['mII']};verified={r['verified']}",
                 )
             )
 

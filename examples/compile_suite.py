@@ -1,12 +1,14 @@
 """Compile the full 17-benchmark suite (paper §V) through the batch service.
 
     PYTHONPATH=src python examples/compile_suite.py [size] [--jobs N]
-        [--cache-dir DIR] [--joint]
+        [--cache-dir DIR] [--joint] [--arch PRESET|FILE.json]
 
 With ``--jobs N`` the suite is mapped by N worker processes
 (``repro.core.service.compile_many``); with ``--cache-dir`` a second run is
 served from the persistent mapping cache instead of re-solving. ``--joint``
 additionally times the SAT-MapIt-style joint baseline per kernel (needs z3).
+``--arch`` targets a heterogeneous architecture spec (DESIGN.md §10)
+instead of the homogeneous ``size×size`` mesh.
 """
 
 import argparse
@@ -21,12 +23,21 @@ ap.add_argument("size", type=int, nargs="?", default=5)
 ap.add_argument("--jobs", type=int, default=1)
 ap.add_argument("--cache-dir", default=None)
 ap.add_argument("--joint", action="store_true")
+ap.add_argument("--arch", default=None,
+                help="architecture preset name or ArchSpec JSON file")
 args = ap.parse_args()
 
-cgra = CGRA(args.size, args.size)
+if args.arch:
+    from repro.core.arch import resolve_arch
+
+    spec = resolve_arch(args.arch)
+    cgra = spec.cgra()
+    target = spec.name
+else:
+    cgra = CGRA(args.size, args.size)
+    target = f"{args.size}x{args.size}"
 suite = load_suite()
-print(f"=== {args.size}x{args.size} CGRA, 17 benchmarks, "
-      f"jobs={args.jobs} ===")
+print(f"=== {target} CGRA, 17 benchmarks, jobs={args.jobs} ===")
 
 batch = [CompileJob(dfg, cgra) for dfg in suite.values()]
 report = compile_many(batch, jobs=args.jobs, deadline_s=30,

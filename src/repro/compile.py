@@ -16,6 +16,10 @@ Examples::
     PYTHONPATH=src python -m repro.compile --dfg-dir kernels/ --size 8 \\
         --jobs 1 --deterministic
 
+    # a heterogeneous target: named preset or ArchSpec JSON (core/arch)
+    PYTHONPATH=src python -m repro.compile --suite \\
+        --arch satmapit_edge_mem_4x4 --jobs 4
+
 A second run against the same ``--cache-dir`` serves every job from the
 persistent cache (``"solved": 0`` in the report's cache counters) — warm
 restarts of a compile server never re-solve.
@@ -69,7 +73,13 @@ def build_parser() -> argparse.ArgumentParser:
                      help="square grid size N (NxN, default 5)")
     tgt.add_argument("--rows", type=int, help="grid rows (overrides --size)")
     tgt.add_argument("--cols", type=int, help="grid cols (overrides --size)")
-    tgt.add_argument("--topology", choices=["mesh", "torus"], default="mesh")
+    tgt.add_argument("--topology",
+                     choices=["mesh", "torus", "diagonal", "one-hop"],
+                     default="mesh")
+    tgt.add_argument("--arch", metavar="PRESET|FILE.json", default=None,
+                     help="architecture spec: a named preset (see "
+                          "repro.core.arch.presets) or an ArchSpec JSON file; "
+                          "overrides --size/--rows/--cols/--topology")
     svc = ap.add_argument_group("service")
     svc.add_argument("--jobs", type=int, default=os.cpu_count() or 1,
                      help="worker processes (1 = sequential in-process)")
@@ -112,9 +122,28 @@ def main(argv=None) -> int:
               file=sys.stderr)
         return 2
 
-    rows = args.rows if args.rows is not None else args.size
-    cols = args.cols if args.cols is not None else args.size
-    cgra = CGRA(rows, cols, topology=args.topology)
+    arch_meta = None
+    if args.arch:
+        from repro.core.arch import resolve_arch
+
+        try:
+            spec = resolve_arch(args.arch)
+        except ValueError as exc:
+            print(str(exc), file=sys.stderr)
+            return 2
+        cgra = spec.cgra()
+        rows, cols = spec.rows, spec.cols
+        arch_meta = {"name": spec.name, "spec_hash": spec.spec_hash()}
+        problems = sorted({p for d in dfgs for p in spec.validate_for(d)})
+        if problems:
+            for p in problems:
+                print(f"workload incompatible with {spec.name}: {p}",
+                      file=sys.stderr)
+            return 2
+    else:
+        rows = args.rows if args.rows is not None else args.size
+        cols = args.cols if args.cols is not None else args.size
+        cgra = CGRA(rows, cols, topology=args.topology)
 
     batch = [CompileJob(d, cgra) for d in dfgs]
     report = compile_many(
@@ -146,7 +175,8 @@ def main(argv=None) -> int:
 
     if args.report:
         payload = {
-            "cgra": {"rows": rows, "cols": cols, "topology": args.topology},
+            "cgra": {"rows": rows, "cols": cols, "topology": cgra.topology},
+            "arch": arch_meta,
             "deterministic": args.deterministic,
             **report.as_dict(),
         }

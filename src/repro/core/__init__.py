@@ -5,10 +5,12 @@ time_smt.py (SMT time solution), mono.py (monomorphism space solution),
 mapper.py (the decoupled pipeline), baseline.py (joint SAT-MapIt-style
 comparison target), benchsuite.py (Table III DFG suite), simulate.py
 (functional validation), placement.py (the same algorithm placing model stage
-graphs onto TPU pod meshes).
+graphs onto TPU pod meshes), arch/ (declarative heterogeneous architecture
+specs: capability classes, topology families, memory ports — DESIGN.md §10).
 """
 
-from .cgra import CGRA, MRRG
+from .arch import ArchSpec, get_preset, list_presets, resolve_arch
+from .cgra import CAP_CLASSES, CGRA, MRRG, op_class
 from .dfg import DFG, Edge, running_example
 from .mapper import Mapping, MapResult, map_dfg
 from .mono import check_monomorphism, find_monomorphism
@@ -30,6 +32,8 @@ from .time_smt import (
 )
 
 __all__ = [
+    "ArchSpec", "get_preset", "list_presets", "resolve_arch",
+    "CAP_CLASSES", "op_class",
     "CGRA", "MRRG", "DFG", "Edge", "running_example",
     "Mapping", "MapResult", "map_dfg",
     "check_monomorphism", "find_monomorphism",

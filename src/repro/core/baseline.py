@@ -42,6 +42,14 @@ def map_dfg_joint(
         raise RuntimeError("joint baseline requires z3")
     dfg.validate()
     stats = MapperStats(backend="z3-joint")
+    if cgra.heterogeneous:
+        # the joint encoding has no capability/port constraints; reject the
+        # target gracefully instead of producing an invalid mapping
+        return MapResult(
+            None, stats,
+            reason="joint baseline does not support heterogeneous targets "
+                   "(capability classes / memory ports)",
+        )
     stats.res_ii = res_ii(dfg, cgra)
     stats.rec_ii = rec_ii(dfg)
     stats.m_ii = min_ii(dfg, cgra)
@@ -61,7 +69,9 @@ def map_dfg_joint(
         if mapping is not None:
             stats.final_ii = ii
             stats.total_s = _time.perf_counter() - start
-            errs = mapping.validate()
+            # registers=False: like the decoupled mapper, the joint encoding
+            # does not constrain register pressure, only space-time validity
+            errs = mapping.validate(registers=False)
             if errs:
                 raise AssertionError(f"joint mapper invalid mapping: {errs}")
             return MapResult(mapping, stats)

@@ -7,15 +7,57 @@ u→v is spatially routable iff PE(u) is PE(v) itself or a neighbour — regardl
 of the time gap (modulo the II wrap for loop-carried deps). This is what makes
 the paper's space/time decoupling sound, and it is the architecture we model.
 
-``topology`` extends the paper's mesh with a torus option, used when the same
-machinery places computation stage graphs onto TPU pod slices (ICI is a torus);
-see core/placement.py.
+``topology`` extends the paper's mesh with three variants: ``torus`` (used
+when the same machinery places computation stage graphs onto TPU pod slices —
+ICI is a torus; see core/placement.py), ``diagonal`` (king-move mesh: the
+4-neighbourhood plus diagonals, as in SAT-MapIt-style CGRAs) and ``one-hop``
+(mesh plus distance-2 row/column links).
+
+Heterogeneity (paper §V-3's flagged assumption, lifted here): each PE carries
+a set of *capability classes* — ``alu`` (plain arithmetic/logic), ``mem``
+(loads/stores), ``mul`` (multiply/divide) — and a grid-level memory-port
+count bounds how many memory ops may fire per cycle. The default
+``CGRA(r, c)`` stays the paper's homogeneous grid (every PE every class, no
+port bound); declarative specs live in ``core/arch`` (DESIGN.md §10).
 """
 
 from __future__ import annotations
 
+import hashlib
+import json
 from dataclasses import dataclass
 from functools import cached_property
+
+# ---------------------------------------------------------------- op classes
+
+#: The capability-class universe. A PE executes an op iff the op's class is in
+#: the PE's class set; ``core/arch`` presets compose grids from these.
+CAP_CLASSES = ("alu", "mem", "mul")
+
+# op -> capability class. Anything not listed (arith/logic/moves/phi/inputs)
+# is plain "alu" work every PE can do.
+_OP_CLASS = {"load": "mem", "store": "mem", "mul": "mul", "div": "mul"}
+
+
+def op_class(op: str) -> str:
+    """Capability class an op needs: ``mem`` | ``mul`` | ``alu``."""
+    return _OP_CLASS.get(op, "alu")
+
+
+_TOPOLOGIES = ("mesh", "torus", "diagonal", "one-hop")
+
+# neighbour offsets per non-torus topology (torus wraps the mesh offsets)
+_OFFSETS = {
+    "mesh": ((1, 0), (-1, 0), (0, 1), (0, -1)),
+    "diagonal": (
+        (1, 0), (-1, 0), (0, 1), (0, -1),
+        (1, 1), (1, -1), (-1, 1), (-1, -1),
+    ),
+    "one-hop": (
+        (1, 0), (-1, 0), (0, 1), (0, -1),
+        (2, 0), (-2, 0), (0, 2), (0, -2),
+    ),
+}
 
 
 @dataclass(frozen=True)
@@ -28,6 +70,13 @@ class CGRA:
     §2). Instances are frozen (hashable, picklable across service workers)
     and precompute their adjacency as bitmasks (DESIGN.md §5).
 
+    ``pe_classes`` makes the grid heterogeneous: entry p is the tuple of
+    capability classes PE p supports (see ``CAP_CLASSES``), and ``mem_ports``
+    optionally bounds memory ops per cycle grid-wide. ``None`` (the default)
+    means the paper's homogeneous machine — every PE supports every class —
+    so all pre-existing callers are unchanged. Build heterogeneous instances
+    through :mod:`repro.core.arch` rather than by hand.
+
     Example::
 
         from repro.core import CGRA
@@ -37,18 +86,38 @@ class CGRA:
         assert cgra.connectivity_degree == 5    # D_M: self + 4 neighbours
         torus = CGRA(4, 4, topology="torus")    # TPU-ICI-shaped variant
         assert all(len(n) == 4 for n in torus.neighbors)
+        king = CGRA(4, 4, topology="diagonal")  # adds diagonal links
+        assert king.connectivity_degree == 9 and not king.triangle_free
     """
 
     rows: int
     cols: int
-    topology: str = "mesh"          # "mesh" (paper) | "torus" (TPU ICI)
-    registers_per_pe: int = 8       # modelled but unconstrained by default (§V-3)
+    topology: str = "mesh"          # "mesh" (paper) | "torus" | "diagonal" | "one-hop"
+    registers_per_pe: int = 8       # enforced by Mapping.validate's pressure probe
+    # per-PE capability classes; None = homogeneous (every PE, every class)
+    pe_classes: tuple[tuple[str, ...], ...] | None = None
+    # max memory ops per cycle grid-wide; None = one port per mem-capable PE
+    mem_ports: int | None = None
 
     def __post_init__(self) -> None:
         if self.rows < 1 or self.cols < 1:
             raise ValueError("CGRA must have at least one PE")
-        if self.topology not in ("mesh", "torus"):
+        if self.topology not in _TOPOLOGIES:
             raise ValueError(f"unknown topology {self.topology!r}")
+        if self.pe_classes is not None:
+            if len(self.pe_classes) != self.num_pes:
+                raise ValueError(
+                    f"pe_classes has {len(self.pe_classes)} entries for "
+                    f"{self.num_pes} PEs"
+                )
+            for p, classes in enumerate(self.pe_classes):
+                if not classes:
+                    raise ValueError(f"PE {p} has no capability classes")
+                for c in classes:
+                    if c not in CAP_CLASSES:
+                        raise ValueError(f"PE {p}: unknown capability class {c!r}")
+        if self.mem_ports is not None and self.mem_ports < 0:
+            raise ValueError("mem_ports must be >= 0")
 
     @property
     def num_pes(self) -> int:
@@ -62,12 +131,13 @@ class CGRA:
 
     @cached_property
     def neighbors(self) -> tuple[tuple[int, ...], ...]:
-        """Mesh/torus neighbours of each PE, *excluding* the PE itself."""
+        """Topology neighbours of each PE, *excluding* the PE itself."""
+        offsets = _OFFSETS["mesh" if self.topology == "torus" else self.topology]
         out: list[tuple[int, ...]] = []
         for pe in range(self.num_pes):
             r, c = self.pe_coords(pe)
             nbrs: set[int] = set()
-            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+            for dr, dc in offsets:
                 rr, cc = r + dr, c + dc
                 if self.topology == "torus":
                     rr %= self.rows
@@ -111,11 +181,109 @@ class CGRA:
         """Paper's D_M: max closed neighbourhood size (self + mesh neighbours).
 
         D_M = 3 for 2x2, 5 for 3x3 and larger meshes, matching §IV-B3.
+        Diagonal and one-hop grids have larger closed neighbourhoods (up to 9).
         """
         return max(len(n) for n in self.neighbors) + 1
 
+    @cached_property
+    def triangle_free(self) -> bool:
+        """True iff the PE graph has no 3-clique.
+
+        The strict-mode triangle exclusion (DESIGN.md §7) is only sound on
+        triangle-free PE graphs: plain meshes are bipartite, but diagonal
+        (king-move) grids, one-hop grids, and tori with a ring of length 3
+        all contain triangles, so three mutually adjacent DFG nodes *can*
+        share a kernel step there. Computed from the actual neighbour lists
+        rather than the topology name so every current and future family is
+        handled by construction.
+        """
+        for pe in range(self.num_pes):
+            nbrs = self.neighbors[pe]
+            for i, a in enumerate(nbrs):
+                if a < pe:
+                    continue
+                for b in nbrs[i + 1:]:
+                    if a in self.neighbors[b]:
+                        return False
+        return True
+
+    # -------------------------------------------------------------- capability
+    @property
+    def heterogeneous(self) -> bool:
+        """True when capabilities or memory ports deviate from the paper model."""
+        return self.pe_classes is not None or self.mem_ports is not None
+
+    @cached_property
+    def capability_masks(self) -> dict[str, int]:
+        """Per capability class, the bitmask of capable PEs (bit p = PE p).
+
+        Shares the DESIGN.md §5 layout contract with ``closed_masks`` so the
+        space engine can intersect a node's candidate set with its op-class
+        mask in one AND. Homogeneous grids map every class to the full mask.
+        """
+        full = (1 << self.num_pes) - 1
+        if self.pe_classes is None:
+            return {c: full for c in CAP_CLASSES}
+        masks = {c: 0 for c in CAP_CLASSES}
+        for pe, classes in enumerate(self.pe_classes):
+            for c in classes:
+                masks[c] |= 1 << pe
+        return masks
+
+    def capable(self, pe: int, cls: str) -> bool:
+        """Can PE ``pe`` execute ops of capability class ``cls``?"""
+        return bool(self.capability_masks[cls] >> pe & 1)
+
+    def class_capacity(self, cls: str) -> int:
+        """Per-kernel-step capacity of a class: capable-PE count, and for
+        ``mem`` additionally clamped by the grid's memory-port count."""
+        cap = self.capability_masks[cls].bit_count()
+        if cls == "mem" and self.mem_ports is not None:
+            cap = min(cap, self.mem_ports)
+        return cap
+
+    def unsupported_ops(self, dfg) -> list[str]:
+        """Ops of ``dfg`` that no PE (or port budget) can ever execute.
+
+        The mapper fails fast on a non-empty result instead of exhausting
+        its (II, slack) window sweep on a structurally impossible target.
+        """
+        errs: list[str] = []
+        seen: set[str] = set()
+        for v in range(dfg.num_nodes):
+            cls = op_class(dfg.ops[v])
+            if cls in seen:
+                continue
+            seen.add(cls)
+            if self.class_capacity(cls) == 0:
+                errs.append(
+                    f"op {dfg.ops[v]!r} (class {cls!r}) has no capable PE on {self}"
+                )
+        return errs
+
+    def arch_token(self) -> str | None:
+        """Cache-key component identifying the heterogeneous architecture.
+
+        ``None`` for the paper's homogeneous grid (dims/topology already key
+        those), a short digest of the capability layout otherwise — folded
+        into both mapping-cache keys (DESIGN.md §9) so heterogeneous and
+        homogeneous mappings of the same DFG never alias.
+        """
+        if not self.heterogeneous:
+            return None
+        payload = json.dumps(
+            {
+                "classes": [sorted(c) for c in self.pe_classes or []],
+                "mem_ports": self.mem_ports,
+            },
+            sort_keys=True,
+            separators=(",", ":"),
+        )
+        return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
     def __str__(self) -> str:  # pragma: no cover
-        return f"CGRA({self.rows}x{self.cols},{self.topology})"
+        het = ",hetero" if self.heterogeneous else ""
+        return f"CGRA({self.rows}x{self.cols},{self.topology}{het})"
 
 
 @dataclass(frozen=True)

@@ -84,7 +84,19 @@ class Mapping:
             r.sort()
         return rows
 
-    def validate(self, *, connectivity: str = "paper") -> list[str]:
+    def validate(
+        self, *, connectivity: str = "paper", registers: bool = True
+    ) -> list[str]:
+        """All violated constraints of this mapping (empty = valid).
+
+        ``registers=True`` (the default) additionally runs the simulator's
+        register-pressure probe and reports a violation when the steady-state
+        live-value count on any PE exceeds ``cgra.registers_per_pe`` — the
+        bound used to be modelled but unconstrained (paper §V-3). The mapper
+        itself validates with ``registers=False``: it only *guarantees* the
+        bound when asked via ``max_register_pressure``, and a caller probing
+        an already-found mapping should see the violation, not a crash.
+        """
         errs = check_time_solution(
             self.dfg, self.cgra, TimeSolution(self.ii, self.t_abs),
             connectivity=connectivity,
@@ -92,6 +104,16 @@ class Mapping:
         errs += check_monomorphism(
             self.dfg, self.cgra, self.labels, self.placement, self.ii
         )
+        if registers and not errs:
+            # simulate imports this module for Mapping: import lazily
+            from .simulate import check_register_pressure
+
+            pressure = check_register_pressure(self)
+            if pressure > self.cgra.registers_per_pe:
+                errs.append(
+                    f"register pressure {pressure} > registers_per_pe "
+                    f"{self.cgra.registers_per_pe}"
+                )
         return errs
 
     def pretty(self) -> str:
@@ -139,7 +161,8 @@ class MapResult:
 
 # --------------------------------------------------------------- LRU cache
 
-# (dfg_hash, rows, cols, topology, connectivity, max_rp, ii) -> (t_abs, placement)
+# (dfg_hash, rows, cols, topology, connectivity, max_rp, arch_token, ii)
+#   -> (t_abs, placement)
 _MAP_CACHE: OrderedDict[tuple, tuple[list[int], list[int]]] = OrderedDict()
 _MAP_CACHE_MAX = 128
 
@@ -149,9 +172,12 @@ def clear_mapping_cache() -> None:
 
 
 def _cache_base_key(dfg, cgra, connectivity, max_rp) -> tuple:
+    # arch_token is None on the paper's homogeneous grid and a digest of the
+    # capability layout otherwise (DESIGN.md §10) — heterogeneous mappings of
+    # the same DFG must never alias homogeneous ones in either cache layer
     return (
         dfg.stable_hash(), cgra.rows, cgra.cols, cgra.topology,
-        connectivity, max_rp,
+        connectivity, max_rp, cgra.arch_token(),
     )
 
 
@@ -292,6 +318,15 @@ def map_dfg(
     # swallowed by the per-window infeasibility handler below
     backend = resolve_backend_name(backend)
     stats = MapperStats()
+    if cgra.heterogeneous:
+        # fail fast on structurally impossible targets (an op class with no
+        # capable PE) instead of exhausting the whole (II, slack) sweep
+        unsupported = cgra.unsupported_ops(dfg)
+        if unsupported:
+            return MapResult(
+                None, stats,
+                reason="infeasible by capability: " + "; ".join(unsupported),
+            )
     stats.res_ii = res_ii(dfg, cgra)
     stats.rec_ii = rec_ii(dfg)
     stats.m_ii = min_ii(dfg, cgra)
@@ -308,7 +343,7 @@ def map_dfg(
             ii, t_abs, placement = hit
             mapping = Mapping(dfg=dfg, cgra=cgra, ii=ii, t_abs=t_abs,
                               placement=placement)
-            if not mapping.validate(connectivity=connectivity):
+            if not mapping.validate(connectivity=connectivity, registers=False):
                 stats.cache_hit = True
                 stats.final_ii = ii
                 stats.backend = "cache"
@@ -331,7 +366,7 @@ def map_dfg(
                 ii, t_abs, placement = dhit
                 mapping = Mapping(dfg=dfg, cgra=cgra, ii=ii, t_abs=t_abs,
                                   placement=placement)
-                if mapping.validate(connectivity=connectivity):
+                if mapping.validate(connectivity=connectivity, registers=False):
                     # schema-valid but semantically invalid: drop it so it
                     # cannot poison every future cold lookup, try higher IIs
                     disk.invalidate(base_key, ii)
@@ -370,7 +405,7 @@ def map_dfg(
         stats.time_phase_s += sum(s.stats.solver_time_s for s in solvers)
         stats.total_s = _time.perf_counter() - start
         if mapping is not None:
-            errs = mapping.validate(connectivity=connectivity)
+            errs = mapping.validate(connectivity=connectivity, registers=False)
             if errs:  # defensive: should be impossible
                 raise AssertionError(f"mapper produced invalid mapping: {errs}")
             stats.final_ii = mapping.ii

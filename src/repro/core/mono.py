@@ -34,7 +34,7 @@ import random
 import time as _time
 from dataclasses import dataclass
 
-from .cgra import CGRA
+from .cgra import CGRA, op_class
 from .dfg import DFG
 
 
@@ -128,6 +128,19 @@ def _search_once(
         if not 0 <= labels[v] < ii:
             raise ValueError(f"label out of range for node {v}: {labels[v]}")
 
+    # Capability pruning (DESIGN.md §10): a node may only sit on a PE whose
+    # class set covers its op — seed each candidate mask with the op-class
+    # mask so incapable placements vanish at the bitset layer instead of
+    # being discovered (and backtracked out of) by the search. Homogeneous
+    # grids keep the full mask, leaving the search path bit-identical.
+    if cgra.heterogeneous:
+        cap_masks = cgra.capability_masks
+        node_mask = [cap_masks[op_class(dfg.ops[v])] for v in range(n)]
+        if not all(node_mask):
+            return None            # some op has no capable PE at all
+    else:
+        node_mask = [full] * n
+
     degs = [len(adj[v]) for v in range(n)]
     # static value-order rank: interior PEs (largest closed nbhd) first keeps
     # future intersections large; jitter on restarts
@@ -140,8 +153,8 @@ def _search_once(
 
     placement = [-1] * n
     occ = [0] * ii                       # occupied-PE mask per kernel step
-    # candidate mask per node: AND of placed neighbours' closed masks
-    cand = [full] * n
+    # candidate mask per node: op-class mask AND placed neighbours' closed masks
+    cand = list(node_mask)
     placed_nbrs = [0] * n
     # unplaced-neighbour demand per (node, step), updated incrementally
     need = [[0] * ii for _ in range(n)]
@@ -163,7 +176,7 @@ def _search_once(
         return True
 
     def seed_candidates(v: int) -> list[int]:
-        free = ~occ[labels[v]]
+        free = node_mask[v] & ~occ[labels[v]]
         return [p for p in pe_rank if (1 << p) & free]
 
     def cand_list(v: int) -> list[int]:
@@ -284,6 +297,14 @@ def check_monomorphism(
         seen[key] = v
         if not 0 <= placement[v] < cgra.num_pes:
             errs.append(f"node {v} placed out of range: {placement[v]}")
+            continue
+        if cgra.heterogeneous:
+            cls = op_class(dfg.ops[v])
+            if not cgra.capable(placement[v], cls):
+                errs.append(
+                    f"capability: node {v} ({dfg.ops[v]}, class {cls!r}) "
+                    f"placed on incapable PE {placement[v]}"
+                )
     adj = dfg.undirected_adjacency()
     for v in dfg.nodes:
         for u in adj[v]:

@@ -130,8 +130,28 @@ def modulo_windows(
 
 
 def res_ii(dfg: DFG, cgra: CGRA) -> int:
-    """ResII = ceil(|V_G| / |PEs|)."""
-    return math.ceil(dfg.num_nodes / cgra.num_pes)
+    """ResII = ceil(|V_G| / |PEs|), sharpened per capability class.
+
+    On heterogeneous grids each op class only has ``class_capacity`` slots
+    per kernel step (mem additionally bounded by the port count), so
+    ResII = max over classes of ceil(|class members| / capacity) — the
+    paper's scalar bound is the homogeneous special case. A class with no
+    capable PEs is the mapper's fail-fast territory
+    (``CGRA.unsupported_ops``), not a finite ResII; it is skipped here.
+    """
+    base = math.ceil(dfg.num_nodes / cgra.num_pes)
+    if cgra.heterogeneous:
+        from .cgra import op_class
+
+        members: dict[str, int] = {}
+        for v in dfg.nodes:
+            cls = op_class(dfg.ops[v])
+            members[cls] = members.get(cls, 0) + 1
+        for cls, n in members.items():
+            cap = cgra.class_capacity(cls)
+            if cap > 0:
+                base = max(base, math.ceil(n / cap))
+    return base
 
 
 def rec_ii(dfg: DFG) -> int:

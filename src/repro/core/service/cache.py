@@ -33,7 +33,9 @@ from dataclasses import dataclass, field
 
 # Bump whenever the entry payload schema or the key schema changes: old
 # entries then simply stop matching (their digests embed the old version).
-CACHE_VERSION = 1
+# v2: base key grew an arch token (heterogeneous architecture digest,
+# DESIGN.md §10) — None on the paper's homogeneous grids.
+CACHE_VERSION = 2
 
 _ENTRY_SUFFIX = ".json"
 
@@ -84,9 +86,15 @@ class DiskMappingCache:
         topology: str,
         connectivity: str,
         max_register_pressure: int | None,
+        arch_token: str | None = None,
     ) -> tuple:
-        """Canonical base key; mirrors the in-memory LRU's ``_cache_base_key``."""
-        return (dfg_hash, rows, cols, topology, connectivity, max_register_pressure)
+        """Canonical base key; mirrors the in-memory LRU's ``_cache_base_key``.
+
+        ``arch_token`` is ``CGRA.arch_token()``: None for the homogeneous
+        paper machine, a digest of the capability layout otherwise.
+        """
+        return (dfg_hash, rows, cols, topology, connectivity,
+                max_register_pressure, arch_token)
 
     def _digest(self, base_key: tuple, ii: int) -> str:
         payload = json.dumps(

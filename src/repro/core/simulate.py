@@ -19,6 +19,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+from .cgra import op_class
 from .dfg import DFG, OP_ARITY
 from .mapper import Mapping
 
@@ -134,9 +135,22 @@ class ExecutionReport:
 def execute_mapping(
     mapping: Mapping, inputs: dict[int, list[float]], num_iters: int
 ) -> ExecutionReport:
-    """Cycle-accurate modulo-scheduled execution on the CGRA model."""
+    """Cycle-accurate modulo-scheduled execution on the CGRA model.
+
+    Beyond routing/timing, heterogeneous grids (core/arch, DESIGN.md §10)
+    are enforced as hard errors: an op on a PE lacking its capability class,
+    or a cycle firing more memory ops than the grid has ports, raises — the
+    oracle double-checks the mapper's capability bookkeeping independently.
+    """
     dfg, cgra, ii = mapping.dfg, mapping.cgra, mapping.ii
     t_abs, placement = mapping.t_abs, mapping.placement
+    for v in dfg.nodes:
+        cls = op_class(dfg.ops[v])
+        if not cgra.capable(placement[v], cls):
+            raise AssertionError(
+                f"capability violation: node {v} ({dfg.ops[v]}, class {cls!r}) "
+                f"mapped to PE {placement[v]} which lacks it"
+            )
     total_cycles = max(t_abs) + 1 + (num_iters - 1) * ii
     # register files: pe -> {(producer_node, iteration): value}
     regs: list[dict[tuple[int, int], float]] = [dict() for _ in range(cgra.num_pes)]
@@ -163,6 +177,15 @@ def execute_mapping(
             d = c - t_abs[v]
             if d >= 0 and d % ii == 0 and d // ii < num_iters:
                 firing.append((v, d // ii))
+        if cgra.mem_ports is not None:
+            mem_firing = sum(
+                1 for v, _ in firing if op_class(dfg.ops[v]) == "mem"
+            )
+            if mem_firing > cgra.mem_ports:
+                raise AssertionError(
+                    f"memory-port violation: {mem_firing} memory ops fire at "
+                    f"cycle {c} > {cgra.mem_ports} ports"
+                )
         for v, it in firing:
             op = dfg.ops[v]
             pe = placement[v]

@@ -30,6 +30,14 @@ class TimeProblem:
     d_m: int                                  # connectivity degree D_M
     strict: bool                              # strict connectivity mode
     seed: int = 0
+    # per-op-class capacities (DESIGN.md §10): (class name, per-step capacity,
+    # member node ids). Only classes whose capacity is strictly below ``cap``
+    # appear — the global capacity bound subsumes the rest, and an empty tuple
+    # keeps the homogeneous constraint set bit-identical to the paper's.
+    class_caps: tuple[tuple[str, int, tuple[int, ...]], ...] = ()
+    # triangle exclusion (strict mode) is only sound on triangle-free PE
+    # graphs: False for diagonal/one-hop grids and 3-rings of a torus.
+    triangle_free: bool = True
 
 
 class TimeBackend(Protocol):  # pragma: no cover - typing only

@@ -78,9 +78,17 @@ class IncrementalCPBackend:
         self._edges = list(p.edges)
         self._labels = [-1] * n
         self._count_per_step = [0] * ii
+        # per-capability-class occupancy (heterogeneous grids, DESIGN.md §10):
+        # class ci keeps its own per-step counter next to the global one
+        self._cls_cap = [cap_c for _name, cap_c, _m in p.class_caps]
+        self._cls_count = [[0] * ii for _ in p.class_caps]
+        self._cls_of: list[tuple[int, ...]] = [()] * n
+        for ci, (_name, _cap_c, members) in enumerate(p.class_caps):
+            for v in members:
+                self._cls_of[v] = self._cls_of[v] + (ci,)
         # triangle cut only matters in strict mode and only for nodes in one
         self._tri_of: list[list[tuple[int, int]]] = [[] for _ in range(n)]
-        if p.strict:
+        if p.strict and p.triangle_free:
             for u, v, w in triangles(p.adj):
                 self._tri_of[u].append((v, w))
                 self._tri_of[v].append((u, w))
@@ -137,6 +145,8 @@ class IncrementalCPBackend:
                     self._trail.append((v, idx))
                     self._labels[v] = k
                     self._count_per_step[k] += 1
+                    for ci in self._cls_of[v]:
+                        self._cls_count[ci][k] += 1
                     placed = True
                     break
             if not placed:
@@ -147,7 +157,10 @@ class IncrementalCPBackend:
     def _backtrack(self) -> None:
         while self._trail:
             v, idx = self._trail.pop()
-            self._count_per_step[self._labels[v]] -= 1
+            k = self._labels[v]
+            self._count_per_step[k] -= 1
+            for ci in self._cls_of[v]:
+                self._cls_count[ci][k] -= 1
             self._labels[v] = -1
             if idx + 1 < len(self._domains[v]):
                 self._pending = idx + 1
@@ -161,6 +174,9 @@ class IncrementalCPBackend:
         labels = self._labels
         if self._count_per_step[k] >= p.cap:
             return False
+        for ci in self._cls_of[v]:
+            if self._cls_count[ci][k] >= self._cls_cap[ci]:
+                return False
         strict = p.strict
         d_m = p.d_m
         # connectivity of v: assigned neighbours bucketed by step

@@ -50,9 +50,13 @@ class Z3Backend:
         # 1. modulo-scheduling constraints
         for src, dst, dist in p.edges:
             s.add(self._t[dst] >= self._t[src] + 1 - ii * dist)
-        # 2. capacity constraints
+        # 2. capacity constraints — global, then per capability class on
+        # heterogeneous grids (only classes with capacity < cap are present)
         for i in range(ii):
             s.add(z3.PbLe([(self._k[v] == i, 1) for v in range(n)], p.cap))
+        for _cls, cap_c, members in p.class_caps:
+            for i in range(ii):
+                s.add(z3.PbLe([(self._k[v] == i, 1) for v in members], cap_c))
         # 3. connectivity constraints
         for v in range(n):
             nbrs = sorted(p.adj[v])
@@ -67,8 +71,9 @@ class Z3Backend:
                         [(self._k[u] == self._k[v], 1) for u in nbrs], p.d_m - 1
                     )
                 )
-        if p.strict:
-            # bipartite PE graph => no mono-chromatic triangle (DESIGN.md §7)
+        if p.strict and p.triangle_free:
+            # triangle-free PE graph => no mono-chromatic triangle (DESIGN.md
+            # §7); unsound on diagonal/one-hop grids, hence the gate
             for u, v, w in triangles(p.adj):
                 s.add(z3.Or(self._k[u] != self._k[v], self._k[u] != self._k[w]))
 

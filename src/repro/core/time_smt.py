@@ -10,7 +10,11 @@ three constraint families:
    ``it_s == it_d``; ``t_d <= t_s`` when ``it_s - it_d == 1``) expressed without
    the case analysis.
 2. *Capacity constraints* (paper's addition) — per kernel step i, the number of
-   nodes labelled i must not exceed the PE count.
+   nodes labelled i must not exceed the PE count. On heterogeneous grids
+   (core/arch, DESIGN.md §10) the scalar bound is joined by one cardinality
+   constraint per capability class whose capacity is below the PE count: at
+   most ``class_capacity(cls)`` nodes of class ``cls`` per step (memory ops
+   additionally clamped by the grid's port count).
 3. *Connectivity constraints* (paper's addition) — for every node v and step i,
    the number of DFG-neighbours of v labelled i must not exceed the CGRA
    connectivity degree D_M (closed neighbourhood size).
@@ -165,6 +169,27 @@ class TimeSolver:
                     f"II={ii} infeasible: node {v} neighbour supply {supply} < "
                     f"{len(nbrs)}"
                 )
+        # Per-op-class capacity (heterogeneous grids): emit one cardinality
+        # constraint per class that is strictly tighter than the global PE
+        # bound, with a free per-window UNSAT precheck — a class with more
+        # members than capacity*II can never fit this window.
+        class_caps: list[tuple[str, int, tuple[int, ...]]] = []
+        if cgra.heterogeneous:
+            from .cgra import op_class
+
+            members: dict[str, list[int]] = {}
+            for v in dfg.nodes:
+                members.setdefault(op_class(dfg.ops[v]), []).append(v)
+            for cls, nodes in sorted(members.items()):
+                cap = cgra.class_capacity(cls)
+                if cap >= cgra.num_pes:
+                    continue
+                if len(nodes) > cap * ii:
+                    raise ValueError(
+                        f"II={ii} infeasible: {len(nodes)} {cls!r} ops > "
+                        f"capacity {cap} x II"
+                    )
+                class_caps.append((cls, cap, tuple(nodes)))
         self.mobs = MobilitySchedule(tuple(self.asap), tuple(self.alap))
         self.adj = dfg.undirected_adjacency()
         problem = TimeProblem(
@@ -178,6 +203,8 @@ class TimeSolver:
             d_m=d_m,
             strict=connectivity == "strict",
             seed=seed,
+            class_caps=tuple(class_caps),
+            triangle_free=cgra.triangle_free,
         )
         self.backend = resolve_backend_name(backend)
         self._engine = create_backend(self.backend, problem, timeout_s=timeout_s)
@@ -266,6 +293,23 @@ def check_time_solution(
         c = sum(1 for v in dfg.nodes if labels[v] == i)
         if c > cgra.num_pes:
             errs.append(f"capacity exceeded at step {i}: {c} > {cgra.num_pes}")
+    if cgra.heterogeneous:
+        from .cgra import op_class
+
+        for cls in {op_class(dfg.ops[v]) for v in dfg.nodes}:
+            cap = cgra.class_capacity(cls)
+            if cap >= cgra.num_pes:
+                continue
+            for i in range(ii):
+                c = sum(
+                    1 for v in dfg.nodes
+                    if labels[v] == i and op_class(dfg.ops[v]) == cls
+                )
+                if c > cap:
+                    errs.append(
+                        f"class capacity exceeded at step {i}: "
+                        f"{c} {cls!r} ops > {cap}"
+                    )
     d_m = cgra.connectivity_degree
     adj = dfg.undirected_adjacency()
     for v in dfg.nodes:
