@@ -12,28 +12,32 @@ from __future__ import annotations
 import json
 import os
 
+from repro.api import Compiler, CompileOptions, resolve_options
 from repro.core.baseline import HAVE_Z3, map_dfg_joint
 from repro.core.benchsuite import load_suite
 from repro.core.cgra import CGRA
-from repro.core.mapper import map_dfg
 
 DEFAULT_SIZES = (2, 4, 6, 8, 10, 14, 20)
 
 
-def run(*, sizes=DEFAULT_SIZES, joint_budget_s: float = 60.0,
-        run_joint: bool = True, out_path: str = "BENCH_fig5.json") -> list[dict]:
+def run(*, options: CompileOptions | None = None, sizes=DEFAULT_SIZES,
+        joint_budget_s: float = 60.0, run_joint: bool = True,
+        out_path: str = "BENCH_fig5.json") -> list[dict]:
+    options = options or resolve_options()
+    # the scaling gate times fresh solves: a fixed budget, no cache reuse
+    options = options.replace(time_budget_s=30.0, use_cache=False)
     dfg = load_suite()["aes"]
     rows = []
     for size in sizes:
         cgra = CGRA(size, size)
-        ours = map_dfg(dfg, cgra, time_budget_s=30, use_cache=False)
+        ours = Compiler(cgra, options).compile(dfg)
         row = {
             "size": size,
-            "ours_time_s": round(ours.stats.total_s, 4),
-            "ours_II": ours.mapping.ii if ours.ok else None,
-            "ours_backend": ours.stats.backend,
-            "time_phase_s": round(ours.stats.time_phase_s, 4),
-            "space_phase_s": round(ours.stats.space_phase_s, 4),
+            "ours_time_s": round(ours.phases.total_s, 4),
+            "ours_II": ours.ii,
+            "ours_backend": ours.backend,
+            "time_phase_s": round(ours.phases.time_s, 4),
+            "space_phase_s": round(ours.phases.space_s, 4),
         }
         if run_joint and HAVE_Z3:
             joint = map_dfg_joint(dfg, cgra, time_budget_s=joint_budget_s)

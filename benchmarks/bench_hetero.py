@@ -7,49 +7,47 @@ execution: ``execute_mapping``'s capability and memory-port assertions fire
 on any op placed on an incapable PE, so a passing run certifies placement
 legality beyond the mapper's own bookkeeping.
 
-Emits ``BENCH_hetero.json`` so CI can gate II/wall-time regressions on
-non-homogeneous targets, mirroring ``BENCH_table3.json`` for the paper grid.
+Rows are the unified ``repro.api.CompileResult`` schema plus
+``arch``/``nodes``/``verified``. Emits ``BENCH_hetero.json`` so CI can gate
+II/wall-time regressions on non-homogeneous targets, mirroring
+``BENCH_table3.json`` for the paper grid.
 """
 
 from __future__ import annotations
 
-from repro.core.arch import resolve_arch
+from repro.api import Compiler, CompileOptions, CompileResult, resolve_options
 from repro.core.benchsuite import load_suite
-from repro.core.mapper import map_dfg
 from repro.core.simulate import check_equivalence
 
 
 def run(
     *,
     arch: str = "satmapit_edge_mem_4x4",
+    options: CompileOptions | None = None,
     budget_s: float = 60.0,
     benchmarks=None,
-    cache_dir: str | None = None,
 ) -> dict:
-    spec = resolve_arch(arch)
-    cgra = spec.cgra()
+    options = options or resolve_options()
+    compiler = Compiler(arch, options.replace(time_budget_s=budget_s))
+    spec = compiler.spec
     suite = load_suite(names=benchmarks)
     rows = []
     for name, dfg in suite.items():
         problems = spec.validate_for(dfg)
-        res = None
-        if not problems:
-            res = map_dfg(dfg, cgra, time_budget_s=budget_s,
-                          cache_dir=cache_dir)
-        row = {
-            "bench": name,
+        if problems:
+            # pre-validation failure in the SAME unified row schema: a
+            # consumer reading row["phases"]/row["trace"] must never KeyError
+            res = CompileResult(name=name, ok=False, failure="infeasible",
+                                reason="; ".join(problems))
+        else:
+            res = compiler.compile(dfg)
+        row = res.as_dict()
+        row.update({
             "nodes": dfg.num_nodes,
             "arch": spec.name,
-            "mII": res.stats.m_ii if res else None,
-            "II": res.mapping.ii if res and res.ok else None,
-            "wall_s": round(res.stats.total_s, 6) if res else 0.0,
-            "cache_hit": bool(res and (res.stats.cache_hit
-                                       or res.stats.disk_cache_hit)),
-            "ok": bool(res and res.ok),
             "verified": False,
-            "reason": "; ".join(problems) if problems else (res.reason if res else ""),
-        }
-        if res and res.ok:
+        })
+        if res.ok:
             # the oracle raises on capability/port/routing/timing violations;
             # a clean pass is the independent placement-legality certificate.
             # A failure must land in the artifact (verified=False drives the

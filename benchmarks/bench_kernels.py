@@ -21,7 +21,8 @@ def _time_call(fn, *args, iters=3, warmup=1):
 
 
 def run() -> list[dict]:
-    from repro.core import CGRA, map_dfg, running_example
+    from repro.api import Compiler, resolve_options
+    from repro.core import CGRA, running_example
     from repro.kernels.flash_attention import flash_attention
     from repro.kernels.ops import cgra_run, compile_program
     from repro.kernels.ref import cgra_sim_reference, reference_attention
@@ -29,7 +30,8 @@ def run() -> list[dict]:
     rows = []
 
     # cgra_sim: mapped running example, batch sweep
-    res = map_dfg(running_example(), CGRA(2, 2), time_budget_s=30)
+    comp = Compiler(CGRA(2, 2), resolve_options("fast", time_budget_s=30.0))
+    res = comp.compile(running_example())
     prog = compile_program(res.mapping)
     rng = np.random.default_rng(0)
     for batch in (64, 256):

@@ -5,114 +5,81 @@
 Timeouts are scaled down from the paper's 4000s to fit the container budget
 (the metric of record is the compilation-time *ratio* CTR and II parity).
 
-``jobs > 1`` routes the per-size sweep through the compilation service
-(``repro.core.service.compile_many``), which is how the harness measures the
-service layer's throughput gain; ``cache_dir`` points both paths at the
-persistent mapping cache so warm re-runs are visible in the per-row
-``cache_hit`` / ``disk_cache_hit`` counters.
+Every row is the unified ``repro.api.CompileResult`` schema (DESIGN.md
+§11.3) plus the bench keys (``size``, ``nodes``, joint columns). ``jobs > 1``
+in the shared options routes the per-size sweep through
+``Compiler.compile_batch`` (the process-pool service), which is how the
+harness measures the service layer's throughput gain; ``cache_dir`` points
+both paths at the persistent mapping cache so warm re-runs are visible in
+the per-row ``source`` provenance.
 """
 
 from __future__ import annotations
 
+from repro.api import Compiler, CompileOptions, resolve_options
 from repro.core.baseline import HAVE_Z3, map_dfg_joint
 from repro.core.benchsuite import load_suite
 from repro.core.cgra import CGRA
-from repro.core.mapper import map_dfg
-from repro.core.service import CompileJob, compile_many
 
 SIZES = (2, 5, 10, 20)
 
 
 def run(
     *,
+    options: CompileOptions | None = None,
     ours_budget_s: float = 60.0,
     joint_budget_s: float = 60.0,
     sizes=SIZES,
     benchmarks=None,
     run_joint: bool = True,
-    jobs: int = 1,
-    cache_dir: str | None = None,
 ) -> list[dict]:
+    options = options or resolve_options()
+    options = options.replace(time_budget_s=ours_budget_s,
+                              deadline_s=ours_budget_s)
     suite = load_suite()
     if benchmarks:
         suite = {k: v for k, v in suite.items() if k in benchmarks}
     run_joint = run_joint and HAVE_Z3   # graceful skip, same as bench_fig5
     rows = []
     for size in sizes:
-        cgra = CGRA(size, size)
-        if jobs > 1:
-            rows.extend(_run_batch(suite, cgra, size, jobs, cache_dir,
-                                   ours_budget_s))
+        compiler = Compiler(CGRA(size, size), options)
+        if (options.jobs or 0) > 1:
+            batch = compiler.compile_batch(list(suite.values()))
+            results = list(batch)
+            extra = {"batch_wall_s": round(batch.wall_s, 3),
+                     "batch_workers": batch.num_workers}
         else:
-            for name, dfg in suite.items():
-                ours = map_dfg(dfg, cgra, time_budget_s=ours_budget_s,
-                               cache_dir=cache_dir)
-                rows.append({
-                    "bench": name,
-                    "size": size,
-                    "nodes": dfg.num_nodes,
-                    "mII": ours.stats.m_ii,
-                    "ours_II": ours.mapping.ii if ours.ok else None,
-                    "ours_time_s": round(ours.stats.total_s, 6),
-                    "wall_s": round(ours.stats.total_s, 6),
-                    "ours_time_phase_s": round(ours.stats.time_phase_s, 3),
-                    "ours_space_phase_s": round(ours.stats.space_phase_s, 4),
-                    "mono_failures": ours.stats.mono_failures,
-                    "cache_hit": ours.stats.cache_hit,
-                    "disk_cache_hit": ours.stats.disk_cache_hit,
-                })
+            results = [compiler.compile(dfg) for dfg in suite.values()]
+            extra = {}
+        for dfg, res in zip(suite.values(), results):
+            rows.append({
+                **res.as_dict(),
+                "size": size,
+                "nodes": dfg.num_nodes,
+                **extra,
+            })
         if run_joint:
             for row in (r for r in rows if r["size"] == size):
-                joint = map_dfg_joint(suite[row["bench"]], cgra,
+                joint = map_dfg_joint(suite[row["name"]], compiler.cgra,
                                       time_budget_s=joint_budget_s)
                 row["joint_II"] = joint.mapping.ii if joint.ok else None
                 row["joint_time_s"] = round(joint.stats.total_s, 3)
-                if row["ours_II"] and joint.ok:
+                if row["ii"] and joint.ok:
                     row["ctr"] = round(
-                        joint.stats.total_s / max(1e-3, row["ours_time_s"]), 2)
-                    row["same_ii"] = row["ours_II"] == joint.mapping.ii
+                        joint.stats.total_s / max(1e-3, row["wall_s"]), 2)
+                    row["same_ii"] = row["ii"] == joint.mapping.ii
         for row in (r for r in rows if r["size"] == size):
             print(row, flush=True)
-    return rows
-
-
-def _run_batch(suite, cgra, size, jobs, cache_dir, budget_s) -> list[dict]:
-    """Per-size sweep through compile_many; rows match the sequential shape."""
-    batch = [CompileJob(dfg, cgra) for dfg in suite.values()]
-    report = compile_many(batch, jobs=jobs, deadline_s=budget_s,
-                          cache_dir=cache_dir)
-    rows = []
-    for job, j in zip(batch, report.jobs):
-        rows.append({
-            "bench": j.name,
-            "size": size,
-            "nodes": job.dfg.num_nodes,
-            "mII": j.m_ii,
-            "ours_II": j.ii,
-            "ours_time_s": round(j.wall_s, 6),
-            "wall_s": round(j.wall_s, 6),
-            "ours_time_phase_s": round(j.time_phase_s, 3),
-            "ours_space_phase_s": round(j.space_phase_s, 4),
-            "mono_failures": j.mono_failures,
-            "cache_hit": j.cache_hit,
-            "disk_cache_hit": j.disk_cache_hit,
-            "batch_wall_s": round(report.wall_s, 3),
-            "batch_workers": report.num_workers,
-        })
     return rows
 
 
 def cache_counters(rows: list[dict]) -> dict:
     """Aggregate hit/miss counters over a run's rows (for BENCH_table3.json)."""
     return {
-        "memory_hits": sum(1 for r in rows if r.get("cache_hit")),
-        "disk_hits": sum(1 for r in rows if r.get("disk_cache_hit")),
-        "solved": sum(
-            1 for r in rows
-            if r.get("ours_II") and not r.get("cache_hit")
-            and not r.get("disk_cache_hit")
-        ),
-        "failed": sum(1 for r in rows if not r.get("ours_II")),
+        "memory_hits": sum(1 for r in rows if r.get("source") == "memory"),
+        "disk_hits": sum(1 for r in rows if r.get("source") == "disk"),
+        "solved": sum(1 for r in rows if r.get("source") == "solve"),
+        "failed": sum(1 for r in rows if not r.get("ok")),
     }
 
 
@@ -120,15 +87,15 @@ def summarize(rows: list[dict]) -> list[str]:
     lines = []
     for size in sorted({r["size"] for r in rows}):
         rs = [r for r in rows if r["size"] == size]
-        both = [r for r in rs if r.get("ours_II") and r.get("joint_II")]
+        both = [r for r in rs if r.get("ii") and r.get("joint_II")]
         if both:
             avg_ctr = sum(r["ctr"] for r in both) / len(both)
             same = sum(1 for r in both if r["same_ii"])
-            better = sum(1 for r in both if r["ours_II"] < r["joint_II"])
+            better = sum(1 for r in both if r["ii"] < r["joint_II"])
             lines.append(
                 f"{size}x{size}: avg CTR (joint/ours) = {avg_ctr:.2f}x over "
                 f"{len(both)} co-solved cases; same II {same}, ours better {better}"
             )
-        solved = sum(1 for r in rs if r.get("ours_II"))
+        solved = sum(1 for r in rs if r.get("ii"))
         lines.append(f"{size}x{size}: ours solved {solved}/{len(rs)}")
     return lines

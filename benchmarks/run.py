@@ -9,9 +9,13 @@
 Each section also emits a ``BENCH_<name>.json`` artifact (consumed by CI and
 by the Fig. 5 near-flat acceptance gate) and prints a
 ``name,us_per_call,derived`` CSV at the end. ``BENCH_table3.json`` carries
-per-kernel wall time plus mapping-cache hit/miss counters (per row and
-aggregate), so service-layer gains — batch parallelism, warm persistent
-cache — show up in the tracked artifacts.
+per-kernel rows in the unified ``repro.api.CompileResult`` schema plus
+aggregate cache hit/miss counters, so service-layer gains — batch
+parallelism, warm persistent cache — show up in the tracked artifacts.
+
+Compiler flags (``--jobs``, ``--cache-dir``, ``--profile``, ``--arch``, ...)
+are the shared :func:`repro.api.add_cli_args` set — resolved through the
+same ``resolve_options`` path as every other CLI (DESIGN.md §11.1).
 
 Full sweep:   ``PYTHONPATH=src python -m benchmarks.run``
 CI smoke:     ``PYTHONPATH=src python -m benchmarks.run --smoke``
@@ -26,6 +30,8 @@ import sys
 
 
 def main(argv=None) -> None:
+    from repro.api import add_cli_args, options_from_args
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small subset, short timeouts")
     ap.add_argument(
@@ -34,32 +40,22 @@ def main(argv=None) -> None:
     )
     ap.add_argument("--skip-joint", action="store_true")
     ap.add_argument("--only", choices=["table3", "fig5", "kernels", "hetero"])
-    ap.add_argument(
-        "--arch", default="satmapit_edge_mem_4x4",
-        help="heterogeneous preset or ArchSpec JSON for the hetero section",
-    )
-    ap.add_argument(
-        "--jobs", type=int, default=1,
-        help="worker processes for the table3 sweep (>1 routes through "
-             "repro.core.service.compile_many)",
-    )
-    ap.add_argument(
-        "--cache-dir", default=None,
-        help="persistent mapping cache directory; a warm second run then "
-             "reports disk hits instead of solve times",
-    )
+    add_cli_args(ap)          # --jobs/--cache-dir/--profile/--arch/... (api)
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
         args.skip_joint = True
+    options = options_from_args(args)
+    # the hetero section needs a heterogeneous target even when the shared
+    # --arch flag is unset; table3/fig5 build their own homogeneous grids
+    hetero_arch = options.arch or "satmapit_edge_mem_4x4"
 
     from benchmarks import bench_fig5, bench_hetero, bench_kernels, bench_table3
 
     csv_rows: list[tuple[str, float, str]] = []
 
     if args.only in (None, "table3"):
-        kw = dict(run_joint=not args.skip_joint, jobs=args.jobs,
-                  cache_dir=args.cache_dir)
+        kw = dict(options=options, run_joint=not args.skip_joint)
         if args.quick:
             kw.update(sizes=(2, 5), ours_budget_s=20, joint_budget_s=20,
                       benchmarks=["bitcount", "fft", "gsm", "susan", "aes"])
@@ -71,7 +67,7 @@ def main(argv=None) -> None:
         with open("BENCH_table3.json", "w") as f:
             json.dump(
                 {
-                    "jobs": args.jobs,
+                    "jobs": options.jobs,
                     "cache": bench_table3.cache_counters(rows),
                     "rows": rows,
                 },
@@ -80,16 +76,17 @@ def main(argv=None) -> None:
         for r in rows:
             csv_rows.append(
                 (
-                    f"table3_{r['bench']}_{r['size']}x{r['size']}",
+                    f"table3_{r['name']}_{r['size']}x{r['size']}",
                     r["wall_s"] * 1e6,
-                    f"II={r.get('ours_II')};mII={r['mII']};CTR={r.get('ctr', '')}",
+                    f"II={r.get('ii')};mII={r['mII']};CTR={r.get('ctr', '')}",
                 )
             )
 
     if args.only in (None, "fig5"):
         # always span 4x4..20x20: the near-flat gate compares those endpoints
         sizes = (4, 10, 20) if args.quick else (2, 4, 6, 8, 10, 14, 20)
-        rows = bench_fig5.run(sizes=sizes, run_joint=not args.skip_joint,
+        rows = bench_fig5.run(options=options, sizes=sizes,
+                              run_joint=not args.skip_joint,
                               joint_budget_s=20 if args.quick else 60)
         for r in rows:
             csv_rows.append(
@@ -101,7 +98,7 @@ def main(argv=None) -> None:
             )
 
     if args.only in (None, "hetero"):
-        kw = dict(arch=args.arch, cache_dir=args.cache_dir)
+        kw = dict(arch=hetero_arch, options=options)
         if args.quick:
             kw.update(budget_s=20,
                       benchmarks=["bitcount", "fft", "gsm", "susan", "aes"])
@@ -111,9 +108,9 @@ def main(argv=None) -> None:
         for r in hrep["rows"]:
             csv_rows.append(
                 (
-                    f"hetero_{r['bench']}_{r['arch']}",
+                    f"hetero_{r['name']}_{r['arch']}",
                     r["wall_s"] * 1e6,
-                    f"II={r['II']};mII={r['mII']};verified={r['verified']}",
+                    f"II={r['ii']};mII={r['mII']};verified={r['verified']}",
                 )
             )
 

@@ -1,28 +1,45 @@
-"""Quickstart: map a loop DFG onto a CGRA with the paper's decoupled mapper,
+"""Quickstart: map a loop DFG onto a CGRA through the ``repro.api`` compiler,
 validate it by execution, and run it batched through the Pallas kernel.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --profile deterministic-ci
+    PYTHONPATH=src python examples/quickstart.py --cache-dir /tmp/repro-maps
+
+This is the pattern to copy: resolve a :class:`repro.api.CompileOptions`
+(profile + flag overrides, one shared flag set across every CLI), bind a
+:class:`repro.api.Compiler` session to a target, and read the structured
+:class:`repro.api.CompileResult`. With ``--cache-dir`` the session exercises
+the persistent mapping cache exactly like the batch service does — a second
+run is served from disk instead of re-solved.
 """
+
+import argparse
 
 import numpy as np
 
-from repro.core import CGRA, map_dfg, running_example
+from repro.api import Compiler, add_cli_args, options_from_args
+from repro.core import CGRA, running_example
 from repro.core.simulate import check_equivalence
 from repro.kernels.ops import cgra_run, compile_program
 
+ap = argparse.ArgumentParser()
+add_cli_args(ap)                      # --profile/--cache-dir/--deterministic/...
+args = ap.parse_args()
+options = options_from_args(args)     # THE resolution path (DESIGN.md §11.1)
+
 # 1. the paper's running example: 14-op loop body with two loop-carried deps
 dfg = running_example()
-cgra = CGRA(2, 2)
+compiler = Compiler(CGRA(2, 2), options)
 
 # 2. decoupled mapping: SMT time solution -> monomorphism space solution
-result = map_dfg(dfg, cgra)
+result = compiler.compile(dfg)
 assert result.ok, result.reason
 m = result.mapping
 print(m.pretty())
 print(
-    f"time phase {result.stats.time_phase_s*1e3:.1f} ms, "
-    f"space phase {result.stats.space_phase_s*1e3:.1f} ms "
-    f"(II={m.ii}, mII={result.stats.m_ii})"
+    f"time phase {result.phases.time_s*1e3:.1f} ms, "
+    f"space phase {result.phases.space_s*1e3:.1f} ms "
+    f"(II={result.ii}, mII={result.m_ii}, source={result.source})"
 )
 
 # 3. validate by execution: cycle-accurate modulo-scheduled run == reference

@@ -3,6 +3,8 @@ production-grade multi-pod JAX training/serving framework built around it.
 
 Subpackages
 -----------
+api        the stable public compiler surface: Compiler sessions, typed
+           CompileOptions profiles, structured CompileResult (DESIGN.md §11)
 core       the paper's mapping algorithm (SMT time + monomorphism space)
 kernels    Pallas TPU kernels (CGRA functional simulator, flash attention)
 models     LM model zoo for the 10 assigned architectures
@@ -16,4 +18,18 @@ launch     production mesh, multi-pod dry-run, train/serve drivers
 roofline   compiled-artifact roofline analysis
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+# the api surface is re-exported lazily so `import repro` stays light
+_API_EXPORTS = (
+    "Compiler", "CompileOptions", "CompileResult", "BatchResult",
+    "PROFILES", "resolve_options",
+)
+
+
+def __getattr__(name):
+    if name in _API_EXPORTS:
+        from repro import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,218 @@
+"""The :class:`Compiler` session: one target + one options value, reused.
+
+A ``Compiler`` binds ``(ArchSpec | CGRA, CompileOptions, caches)`` once and
+routes every compile through the existing mapper/service internals
+(DESIGN.md §11.2): :meth:`Compiler.compile` is the in-process portfolio
+mapper, :meth:`Compiler.compile_batch` fans a workload across the process
+pool (``core/service/batch.compile_many``), and :meth:`Compiler.compile_racing`
+stripes one hard problem's (II, slack) windows across workers. All three
+return the unified :class:`~repro.api.result.CompileResult` schema.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from typing import Callable, Iterable, Sequence
+
+from ..core.arch import ArchSpec, resolve_arch
+from ..core.cgra import CGRA
+from ..core.dfg import DFG
+from ..core.mapper import _map_dfg_impl
+from ..core.service.batch import CompileJob, compile_many, map_dfg_racing
+from ..core.service.cache import DiskMappingCache, resolve_cache_dir
+from .options import CompileOptions, resolve_options
+from .result import BatchResult, CompileResult
+
+__all__ = ["Compiler"]
+
+
+def _resolve_target(target) -> tuple[ArchSpec | None, CGRA]:
+    """Normalise a target into (spec | None, cgra).
+
+    Accepts a :class:`CGRA` (spec is None), an :class:`ArchSpec`, or a string
+    (preset name / ArchSpec JSON path, via ``resolve_arch``) — the same
+    resolution every CLI's ``--arch`` flag uses.
+    """
+    if isinstance(target, CGRA):
+        return None, target
+    if isinstance(target, ArchSpec):
+        return target, target.cgra()
+    if isinstance(target, str):
+        spec = resolve_arch(target)
+        return spec, spec.cgra()
+    raise TypeError(
+        f"target must be a CGRA, ArchSpec, or preset/path string, "
+        f"got {type(target).__name__}"
+    )
+
+
+class Compiler:
+    """A compilation session bound to one target machine and one policy.
+
+    Example — a deterministic session over the SAT-MapIt-style preset::
+
+        from repro.api import Compiler, resolve_options
+        from repro.core import running_example
+
+        comp = Compiler("satmapit_edge_mem_4x4",
+                        resolve_options("deterministic-ci"))
+        res = comp.compile(running_example())
+        assert res.ok and res.mapping.validate() == []
+        batch = comp.compile_batch([running_example()])
+        assert batch.ok and batch.results[0].ii == res.ii
+
+    Parameters:
+
+    * ``target`` — a :class:`~repro.core.cgra.CGRA`, an
+      :class:`~repro.core.arch.ArchSpec`, or a preset-name/JSON-path string;
+      ``None`` falls back to ``options.arch`` (one of the two must name a
+      machine).
+    * ``options`` — a :class:`~repro.api.options.CompileOptions`, a profile
+      name, or ``None`` (profile defaults); extra ``**overrides`` are applied
+      on top via :func:`~repro.api.options.resolve_options` semantics.
+
+    The session's persistent cache handle is exposed as :attr:`cache`
+    (``None`` when no cache directory is configured) for pre-warming and
+    inspection; compiles share its files through the content-addressed store
+    (DESIGN.md §9).
+    """
+
+    def __init__(self, target=None, options=None, **overrides) -> None:
+        if isinstance(options, str):
+            options = resolve_options(options)
+        elif options is None:
+            options = resolve_options()
+        elif not isinstance(options, CompileOptions):
+            raise TypeError(
+                f"options must be CompileOptions, a profile name, or None, "
+                f"got {type(options).__name__}"
+            )
+        if overrides:
+            options = options.replace(**overrides)
+        options.validate()
+        if target is None:
+            if options.arch is None:
+                raise ValueError(
+                    "no target machine: pass target= or set options.arch"
+                )
+            target = options.arch
+        self.spec, self.cgra = _resolve_target(target)
+        self.options = options
+        self._cache: DiskMappingCache | None = None
+        if options.use_cache:
+            root = resolve_cache_dir(options.cache_dir)
+            if root is not None:
+                self._cache = DiskMappingCache(root)
+
+    # ------------------------------------------------------------- properties
+    @property
+    def cache(self) -> DiskMappingCache | None:
+        """The session's persistent mapping-cache handle (or None).
+
+        One stable object per session — compiles running in this process or
+        in pool workers share its *files* (content-addressed, DESIGN.md §9)
+        while its ``stats`` count only operations made through this handle.
+        """
+        return self._cache
+
+    def validate_workload(self, dfgs: Iterable[DFG]) -> list[str]:
+        """Feasibility problems of a workload against this target (empty =
+        every op class has a capable PE); mirrors ``ArchSpec.validate_for``."""
+        return sorted({p for d in dfgs for p in self.cgra.unsupported_ops(d)})
+
+    def _opts(self, overrides: dict) -> CompileOptions:
+        if not overrides:
+            return self.options
+        opts = self.options.replace(**overrides)
+        opts.validate()
+        return opts
+
+    # --------------------------------------------------------------- compile
+    def compile(
+        self,
+        dfg: DFG,
+        *,
+        should_stop: Callable[[], bool] | None = None,
+        **overrides,
+    ) -> CompileResult:
+        """Map one DFG in-process through the portfolio mapper.
+
+        ``should_stop`` is the cooperative-cancellation hook forwarded to the
+        mapper; ``**overrides`` are per-call option changes (e.g.
+        ``time_budget_s=5``) that do not mutate the session.
+        """
+        opts = self._opts(overrides)
+        res = _map_dfg_impl(
+            dfg, self.cgra, should_stop=should_stop, **opts.mapper_kwargs()
+        )
+        return CompileResult.from_map_result(res, name=dfg.name)
+
+    def compile_batch(
+        self,
+        dfgs: Sequence[DFG],
+        *,
+        names: Sequence[str] | None = None,
+        cancel=None,
+        **overrides,
+    ) -> BatchResult:
+        """Map a workload across the process pool (DESIGN.md §8.1).
+
+        ``options.jobs`` picks the worker count (None = all cores; 1 =
+        sequential in-process, the deterministic-CI mode), ``options.
+        deadline_s`` the per-job wall budget, and ``cancel`` an Event-like
+        object for cooperative cancellation. Rows come back in input order.
+        """
+        opts = self._opts(overrides)
+        if names is not None and len(names) != len(dfgs):
+            raise ValueError(
+                f"names has {len(names)} entries for {len(dfgs)} DFGs"
+            )
+        names = names or [d.name for d in dfgs]
+        batch = [
+            CompileJob(dfg, self.cgra, name=name)
+            for dfg, name in zip(dfgs, names)
+        ]
+        t0 = _time.perf_counter()
+        report = compile_many(
+            batch,
+            jobs=opts.jobs,
+            deterministic=opts.deterministic,
+            cache_dir=opts.cache_dir,
+            use_cache=opts.use_cache,
+            cancel=cancel,
+            map_options=opts.batch_kwargs(),
+        )
+        result = BatchResult.from_report(
+            report, pairs=[(job.dfg, job.cgra) for job in batch]
+        )
+        result.wall_s = _time.perf_counter() - t0
+        return result
+
+    def compile_racing(
+        self,
+        dfg: DFG,
+        *,
+        workers: int | None = None,
+        **overrides,
+    ) -> CompileResult:
+        """Race one mapping's (II, slack) windows across workers (§8.2).
+
+        ``workers`` defaults to ``options.racing_workers``; deterministic
+        sessions fall back to the plain in-process compile (a wall-clock race
+        cannot honor the reproducibility contract).
+        """
+        opts = self._opts(overrides)
+        res = map_dfg_racing(
+            dfg,
+            self.cgra,
+            workers=workers if workers is not None else opts.racing_workers,
+            **opts.mapper_kwargs(exclude=("window_offset", "window_stride")),
+        )
+        return CompileResult.from_map_result(
+            res, name=dfg.name, wall_s=res.stats.total_s
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover
+        tgt = self.spec.name if self.spec is not None else str(self.cgra)
+        prof = self.options.profile or "custom"
+        return f"Compiler(target={tgt}, options={prof})"

@@ -1,0 +1,323 @@
+"""Structured compile outcomes: :class:`CompileResult` / :class:`BatchResult`.
+
+One result schema unifies what used to diverge between the mapper's
+``MapResult`` and the service's ``JobReport``/``CompileReport`` (DESIGN.md
+§11.3): per-phase timings (time search, space search, validation), the
+window/backoff trace, cache provenance, and a *machine-readable* failure
+code next to the human-readable reason. ``CompileResult.as_dict()`` is the
+canonical row serialisation — the CLI JSON report, the benchmark artifacts,
+and service rows all emit exactly this shape.
+
+Failure codes (:data:`FAILURE_KINDS`):
+
+* ``infeasible`` — structurally impossible (an op class with no capable PE);
+* ``budget-exhausted`` — the wall/step budget ran out before a mapping;
+* ``search-exhausted`` — the whole (II, slack) space was proven empty;
+* ``cancelled`` — cooperative cancellation (service stop event);
+* ``error`` — the compile raised (bad DFG, worker death, cache I/O);
+* ``unknown`` — anything the classifier cannot attribute.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # imported lazily at runtime to keep this module cheap
+    from ..core.cgra import CGRA
+    from ..core.dfg import DFG
+    from ..core.mapper import Mapping, MapResult
+    from ..core.service.batch import CompileReport, JobReport
+
+__all__ = [
+    "BatchResult",
+    "CompileResult",
+    "FAILURE_KINDS",
+    "PhaseTimings",
+    "SearchTrace",
+    "classify_failure",
+]
+
+FAILURE_KINDS = (
+    "infeasible",
+    "budget-exhausted",
+    "search-exhausted",
+    "cancelled",
+    "error",
+    "unknown",
+)
+
+# exception rows are formatted f"{type(exc).__name__}: {exc}" by the service
+# layer; every mapper-produced reason starts lowercase, so an uppercase-
+# leading identifier + colon is unambiguous (covers BrokenProcessPool,
+# TimeoutError, KeyboardInterrupt, custom exception names alike)
+_EXC_REASON_RE = re.compile(r"^[A-Z][A-Za-z0-9_]*: ")
+
+
+def classify_failure(ok: bool, reason: str, cancelled: bool = False) -> str | None:
+    """Map a human-readable failure reason to a machine-readable code.
+
+    Returns None for successful compiles. The classifier is anchored on the
+    reason strings the mapper/service actually produce (``core/mapper.py``
+    ``finish()``/capability fail-fast, ``core/service/batch.py`` error rows);
+    anything unrecognised lands in ``unknown`` rather than raising.
+    """
+    if ok:
+        return None
+    if cancelled:
+        return "cancelled"
+    r = reason or ""
+    if r.startswith("infeasible"):
+        return "infeasible"
+    if "search space exhausted" in r:
+        return "search-exhausted"
+    if "budget exhausted" in r or "within budget" in r:
+        return "budget-exhausted"
+    if "cancelled" in r:
+        return "cancelled"
+    if _EXC_REASON_RE.match(r):
+        return "error"
+    return "unknown"
+
+
+@dataclass(frozen=True)
+class PhaseTimings:
+    """Wall seconds per pipeline phase (DESIGN.md §1 stages + validation)."""
+
+    time_s: float = 0.0        # TIME: modulo-schedule search
+    space_s: float = 0.0       # SPACE: monomorphism search
+    validate_s: float = 0.0    # independent re-validation of candidate/served mappings
+    total_s: float = 0.0       # whole compile() call
+
+    def as_dict(self) -> dict:
+        return {
+            "time_s": round(self.time_s, 6),
+            "space_s": round(self.space_s, 6),
+            "validate_s": round(self.validate_s, 6),
+            "total_s": round(self.total_s, 6),
+        }
+
+
+@dataclass(frozen=True)
+class SearchTrace:
+    """Window/backoff trace of the portfolio search (DESIGN.md §6)."""
+
+    rounds: int = 0                 # portfolio rounds entered
+    windows_opened: int = 0         # (II, slack) windows that got a time solver
+    time_solutions_tried: int = 0   # label partitions proposed by TIME
+    mono_failures: int = 0          # partitions SPACE failed to embed (backoffs)
+    space_nodes_visited: int = 0    # monomorphism search nodes
+
+    def as_dict(self) -> dict:
+        return {
+            "rounds": self.rounds,
+            "windows_opened": self.windows_opened,
+            "time_solutions_tried": self.time_solutions_tried,
+            "mono_failures": self.mono_failures,
+            "space_nodes_visited": self.space_nodes_visited,
+        }
+
+
+@dataclass
+class CompileResult:
+    """One compile outcome in the unified schema (DESIGN.md §11.3).
+
+    Example — compile and read the structured telemetry::
+
+        from repro.api import Compiler, resolve_options
+        from repro.core import CGRA, running_example
+
+        comp = Compiler(CGRA(2, 2), resolve_options("deterministic-ci"))
+        res = comp.compile(running_example())
+        assert res.ok and res.ii == 4 and res.source == "solve"
+        row = res.as_dict()          # the exact JSON row every frontend emits
+        assert row["phases"]["time_s"] >= 0 and row["failure"] is None
+
+    ``mapping`` is the full space-time mapping when available (always for
+    in-process compiles; reconstructed from the worker's row for batch
+    compiles), or None on failure.
+    """
+
+    name: str
+    ok: bool
+    ii: int | None = None
+    m_ii: int = -1
+    res_ii: int = -1
+    rec_ii: int = -1
+    backend: str = ""
+    #: cache provenance: "memory" | "disk" | "solve" (None when failed)
+    source: str | None = None
+    wall_s: float = 0.0
+    phases: PhaseTimings = field(default_factory=PhaseTimings)
+    trace: SearchTrace = field(default_factory=SearchTrace)
+    #: machine-readable failure code (see FAILURE_KINDS); None when ok
+    failure: str | None = None
+    reason: str = ""
+    cancelled: bool = False
+    mapping: "Mapping | None" = None
+
+    # ------------------------------------------------------------ constructors
+    @classmethod
+    def from_map_result(
+        cls, res: "MapResult", *, name: str = "", wall_s: float | None = None
+    ) -> "CompileResult":
+        """Lift a mapper ``MapResult`` into the unified schema."""
+        s = res.stats
+        if res.ok:
+            source = ("memory" if s.cache_hit
+                      else "disk" if s.disk_cache_hit else "solve")
+        else:
+            source = None
+        return cls(
+            name=name or (res.mapping.dfg.name if res.ok else name),
+            ok=res.ok,
+            ii=res.mapping.ii if res.ok else None,
+            m_ii=s.m_ii,
+            res_ii=s.res_ii,
+            rec_ii=s.rec_ii,
+            backend=s.backend,
+            source=source,
+            wall_s=wall_s if wall_s is not None else s.total_s,
+            phases=PhaseTimings(
+                time_s=s.time_phase_s,
+                space_s=s.space_phase_s,
+                validate_s=s.validate_s,
+                total_s=s.total_s,
+            ),
+            trace=SearchTrace(
+                rounds=s.rounds,
+                windows_opened=s.windows_opened,
+                time_solutions_tried=s.time_solutions_tried,
+                mono_failures=s.mono_failures,
+                space_nodes_visited=s.space_nodes_visited,
+            ),
+            failure=classify_failure(res.ok, res.reason),
+            reason=res.reason,
+            mapping=res.mapping,
+        )
+
+    @classmethod
+    def from_job_report(
+        cls, job: "JobReport", dfg: "DFG | None" = None,
+        cgra: "CGRA | None" = None,
+    ) -> "CompileResult":
+        """Lift a service row; reconstructs the Mapping when the worker
+        shipped ``t_abs``/``placement`` back and the caller provides the
+        (unpickled-once) DFG/CGRA pair."""
+        mapping = None
+        if (job.ok and dfg is not None and cgra is not None
+                and job.t_abs is not None and job.placement is not None
+                and job.ii is not None):
+            from ..core.mapper import Mapping
+
+            mapping = Mapping(dfg=dfg, cgra=cgra, ii=job.ii,
+                              t_abs=list(job.t_abs),
+                              placement=list(job.placement))
+        if job.ok:
+            source = ("memory" if job.cache_hit
+                      else "disk" if job.disk_cache_hit else "solve")
+        else:
+            source = None
+        return cls(
+            name=job.name,
+            ok=job.ok,
+            ii=job.ii,
+            m_ii=job.m_ii,
+            res_ii=job.res_ii,
+            rec_ii=job.rec_ii,
+            backend=job.backend,
+            source=source,
+            wall_s=job.wall_s,
+            phases=PhaseTimings(
+                time_s=job.time_phase_s,
+                space_s=job.space_phase_s,
+                validate_s=job.validate_s,
+                total_s=job.wall_s,
+            ),
+            trace=SearchTrace(
+                rounds=job.rounds,
+                windows_opened=job.windows_opened,
+                time_solutions_tried=job.time_solutions_tried,
+                mono_failures=job.mono_failures,
+                space_nodes_visited=job.space_nodes_visited,
+            ),
+            failure=classify_failure(job.ok, job.reason, job.cancelled),
+            reason=job.reason,
+            cancelled=job.cancelled,
+            mapping=mapping,
+        )
+
+    # -------------------------------------------------------------------- I/O
+    def as_dict(self) -> dict:
+        """The canonical JSON row (CLI report, benchmarks, service rows)."""
+        return {
+            "name": self.name,
+            "ok": self.ok,
+            "ii": self.ii,
+            "mII": self.m_ii,
+            "resII": self.res_ii,
+            "recII": self.rec_ii,
+            "backend": self.backend,
+            "source": self.source,
+            "wall_s": round(self.wall_s, 6),
+            "phases": self.phases.as_dict(),
+            "trace": self.trace.as_dict(),
+            "failure": self.failure,
+            "reason": self.reason,
+            "cancelled": self.cancelled,
+        }
+
+
+@dataclass
+class BatchResult:
+    """A batch of :class:`CompileResult` rows + aggregate counters."""
+
+    results: list[CompileResult]
+    wall_s: float = 0.0
+    num_workers: int = 1
+
+    @property
+    def ok(self) -> bool:
+        return all(r.ok for r in self.results)
+
+    @property
+    def cache_counters(self) -> dict:
+        """Aggregate provenance counters (memory/disk/solved/failed)."""
+        return {
+            "memory_hits": sum(r.source == "memory" for r in self.results),
+            "disk_hits": sum(r.source == "disk" for r in self.results),
+            "solved": sum(r.source == "solve" for r in self.results),
+            "failed": sum(not r.ok for r in self.results),
+        }
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    @classmethod
+    def from_report(
+        cls, report: "CompileReport", pairs=None
+    ) -> "BatchResult":
+        """Lift a service ``CompileReport``; ``pairs`` is the matching list
+        of (dfg, cgra) used to reconstruct mappings from worker rows."""
+        pairs = pairs or [(None, None)] * len(report.jobs)
+        return cls(
+            results=[
+                CompileResult.from_job_report(j, dfg, cgra)
+                for j, (dfg, cgra) in zip(report.jobs, pairs)
+            ],
+            wall_s=report.wall_s,
+            num_workers=report.num_workers,
+        )
+
+    def as_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "wall_s": round(self.wall_s, 4),
+            "num_workers": self.num_workers,
+            "cache": self.cache_counters,
+            "jobs": [r.as_dict() for r in self.results],
+        }

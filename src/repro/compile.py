@@ -1,10 +1,11 @@
 """``python -m repro.compile`` — batch-compile DFGs and emit a JSON report.
 
-The CLI front-end of the compilation service (``repro.core.service``,
-DESIGN.md §8): it gathers a workload (the built-in Table III suite and/or a
-directory of ``DFG.to_json`` files), maps every DFG onto the requested CGRA
-across a process pool, and writes a machine-readable report with per-job wall
-times, IIs, and cache hit/miss counters.
+The CLI front-end of the :mod:`repro.api` compiler layer (DESIGN.md §11): it
+gathers a workload (the built-in Table III suite and/or a directory of
+``DFG.to_json`` files), resolves its flags through the single
+``resolve_options`` path shared by every frontend, and maps the workload
+through a :class:`repro.api.Compiler` session. The JSON report embeds the
+resolved options block and one unified ``CompileResult`` row per job.
 
 Examples::
 
@@ -12,9 +13,9 @@ Examples::
     PYTHONPATH=src python -m repro.compile --suite --size 5 --jobs 4 \\
         --cache-dir ~/.cache/repro-maps --report report.json
 
-    # a directory of extracted DFG JSON files, sequential + deterministic
+    # a directory of extracted DFG JSON files, reproducible CI profile
     PYTHONPATH=src python -m repro.compile --dfg-dir kernels/ --size 8 \\
-        --jobs 1 --deterministic
+        --profile deterministic-ci
 
     # a heterogeneous target: named preset or ArchSpec JSON (core/arch)
     PYTHONPATH=src python -m repro.compile --suite \\
@@ -32,9 +33,9 @@ import json
 import os
 import sys
 
+from repro.api import Compiler, add_cli_args, options_from_args
 from repro.core.cgra import CGRA
 from repro.core.dfg import DFG
-from repro.core.service import CompileJob, compile_many
 
 
 def _load_dfg_dir(path: str) -> list[DFG]:
@@ -76,29 +77,9 @@ def build_parser() -> argparse.ArgumentParser:
     tgt.add_argument("--topology",
                      choices=["mesh", "torus", "diagonal", "one-hop"],
                      default="mesh")
-    tgt.add_argument("--arch", metavar="PRESET|FILE.json", default=None,
-                     help="architecture spec: a named preset (see "
-                          "repro.core.arch.presets) or an ArchSpec JSON file; "
-                          "overrides --size/--rows/--cols/--topology")
-    svc = ap.add_argument_group("service")
-    svc.add_argument("--jobs", type=int, default=os.cpu_count() or 1,
-                     help="worker processes (1 = sequential in-process)")
-    svc.add_argument("--deadline-s", type=float, default=60.0,
-                     help="per-job wall budget in seconds")
-    svc.add_argument("--deterministic", action="store_true",
-                     help="step-budgeted reproducible mode (bypasses caches)")
-    svc.add_argument("--cache-dir", default=None,
-                     help="persistent mapping cache directory "
-                          "(default: $REPRO_CACHE_DIR if set)")
-    svc.add_argument("--no-cache", action="store_true",
-                     help="disable both mapping cache layers")
-    mp_ = ap.add_argument_group("mapper")
-    mp_.add_argument("--max-slack", type=int, default=3)
-    mp_.add_argument("--connectivity", choices=["strict", "paper"],
-                     default="strict")
-    mp_.add_argument("--backend", default="auto",
-                     help="time backend: auto | cp | z3")
-    mp_.add_argument("--max-register-pressure", type=int, default=None)
+    # the shared compiler-option flags (--profile, --jobs, --cache-dir,
+    # --deterministic, --arch, ...) — defined ONCE in repro.api.options
+    add_cli_args(ap)
     ap.add_argument("--report", metavar="PATH", default=None,
                     help="write the JSON report here (default: stdout summary only)")
     ap.add_argument("--quiet", action="store_true")
@@ -107,6 +88,14 @@ def build_parser() -> argparse.ArgumentParser:
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+    try:
+        opts = options_from_args(args)
+    except ValueError as exc:
+        print(str(exc), file=sys.stderr)
+        return 2
+    if opts.deadline_s is None and not opts.deterministic:
+        # this CLI's historical per-job wall budget; --deadline-s overrides
+        opts = opts.replace(deadline_s=60.0)
 
     dfgs: list[DFG] = []
     if args.suite or args.bench:
@@ -122,69 +111,52 @@ def main(argv=None) -> int:
               file=sys.stderr)
         return 2
 
-    arch_meta = None
-    if args.arch:
-        from repro.core.arch import resolve_arch
-
+    if opts.arch:
         try:
-            spec = resolve_arch(args.arch)
+            compiler = Compiler(options=opts)
         except ValueError as exc:
             print(str(exc), file=sys.stderr)
-            return 2
-        cgra = spec.cgra()
-        rows, cols = spec.rows, spec.cols
-        arch_meta = {"name": spec.name, "spec_hash": spec.spec_hash()}
-        problems = sorted({p for d in dfgs for p in spec.validate_for(d)})
-        if problems:
-            for p in problems:
-                print(f"workload incompatible with {spec.name}: {p}",
-                      file=sys.stderr)
             return 2
     else:
         rows = args.rows if args.rows is not None else args.size
         cols = args.cols if args.cols is not None else args.size
-        cgra = CGRA(rows, cols, topology=args.topology)
+        compiler = Compiler(CGRA(rows, cols, topology=args.topology), opts)
 
-    batch = [CompileJob(d, cgra) for d in dfgs]
-    report = compile_many(
-        batch,
-        jobs=args.jobs,
-        deadline_s=args.deadline_s,
-        deterministic=args.deterministic,
-        cache_dir=args.cache_dir,
-        use_cache=not args.no_cache,
-        map_options={
-            "max_slack": args.max_slack,
-            "connectivity": args.connectivity,
-            "backend": args.backend,
-            "max_register_pressure": args.max_register_pressure,
-        },
-    )
+    problems = compiler.validate_workload(dfgs)
+    if problems:
+        target = compiler.spec.name if compiler.spec else str(compiler.cgra)
+        for p in problems:
+            print(f"workload incompatible with {target}: {p}", file=sys.stderr)
+        return 2
+
+    batch = compiler.compile_batch(dfgs)
 
     if not args.quiet:
-        for j in report.jobs:
-            status = f"II={j.ii}" if j.ok else f"FAILED ({j.reason})"
-            src_ = ("memory" if j.cache_hit
-                    else "disk" if j.disk_cache_hit else "solved")
-            print(f"{j.name:20s} {status:24s} {j.wall_s:7.3f}s  [{src_}]")
-        c = report.cache_counters
-        print(f"--- {len(report.jobs)} jobs on {cgra} in {report.wall_s:.2f}s "
-              f"({report.num_workers} workers): {c['solved']} solved, "
+        for r in batch:
+            status = f"II={r.ii}" if r.ok else f"FAILED ({r.reason})"
+            print(f"{r.name:20s} {status:24s} {r.wall_s:7.3f}s  [{r.source or r.failure}]")
+        c = batch.cache_counters
+        print(f"--- {len(batch)} jobs on {compiler.cgra} in {batch.wall_s:.2f}s "
+              f"({batch.num_workers} workers): {c['solved']} solved, "
               f"{c['memory_hits']} memory hits, {c['disk_hits']} disk hits, "
               f"{c['failed']} failed")
 
     if args.report:
+        spec = compiler.spec
         payload = {
-            "cgra": {"rows": rows, "cols": cols, "topology": cgra.topology},
-            "arch": arch_meta,
-            "deterministic": args.deterministic,
-            **report.as_dict(),
+            "cgra": {"rows": compiler.cgra.rows, "cols": compiler.cgra.cols,
+                     "topology": compiler.cgra.topology},
+            "arch": (None if spec is None
+                     else {"name": spec.name, "spec_hash": spec.spec_hash()}),
+            "deterministic": opts.deterministic,
+            "options": opts.as_dict(),
+            **batch.as_dict(),
         }
         with open(args.report, "w", encoding="utf-8") as f:
             json.dump(payload, f, indent=2)
         if not args.quiet:
             print(f"wrote {os.path.abspath(args.report)}")
-    return 0 if report.ok else 1
+    return 0 if batch.ok else 1
 
 
 if __name__ == "__main__":

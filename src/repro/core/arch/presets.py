@@ -7,7 +7,9 @@ mirroring a machine from the paper or its companion line of work:
   every PE executes every op.
 * ``satmapit_edge_mem_4x4`` — SAT-MapIt-style (arXiv 2512.02875): only the
   twelve border PEs of a 4×4 mesh reach memory (4 load/store ports), interior
-  PEs are pure compute; every PE keeps the full ALU + multiplier.
+  PEs are pure compute; every PE keeps the full ALU + multiplier. Memory PEs
+  carry a double-size register file (``registers_by_class``) — the
+  buffer-sizing asymmetry such machines use for load/store latency hiding.
 * ``mul_sparse_8x8`` — an 8×8 mesh where only the main-diagonal PEs carry a
   multiplier/divider (the classic area-saving layout); memory everywhere.
 * ``diagonal_20x20`` — a large king-move (diagonal) grid, homogeneous
@@ -46,6 +48,7 @@ def satmapit_edge_mem_4x4() -> ArchSpec:
         cols=4,
         pe_classes=_border_mem(4, 4, ("alu", "mem", "mul"), ("alu", "mul")),
         mem_ports=4,
+        registers_by_class={"mem": 16},
     )
 
 

@@ -16,7 +16,8 @@ The JSON format is deliberately small::
       "topology": "mesh",
       "pe_classes": [["alu", "mem"], ["alu"], ...],   // row-major, or null
       "mem_ports": 4,                                  // or null
-      "registers_per_pe": 8
+      "registers_per_pe": 8,
+      "registers_by_class": {"mem": 16}                // or null (scalar only)
     }
 
 ``pe_classes: null`` means homogeneous (every PE, every class). Named
@@ -64,6 +65,23 @@ class ArchSpec:
     # max memory ops per cycle grid-wide; None = one port per mem-capable PE
     mem_ports: int | None = None
     registers_per_pe: int = 8
+    # per-capability-class register-file override (e.g. {"mem": 16} sizes
+    # memory-PE buffers differently, SAT-MapIt-style); a dict or a
+    # ((class, count), ...) tuple, normalised to the sorted tuple form.
+    # None = every PE gets the scalar registers_per_pe
+    registers_by_class: tuple[tuple[str, int], ...] | None = None
+
+    def __post_init__(self) -> None:
+        if isinstance(self.registers_by_class, dict):
+            object.__setattr__(
+                self, "registers_by_class",
+                tuple(sorted(self.registers_by_class.items())),
+            )
+        elif self.registers_by_class is not None:
+            object.__setattr__(
+                self, "registers_by_class",
+                tuple(sorted(tuple(p) for p in self.registers_by_class)),
+            )
 
     # ------------------------------------------------------------- validation
     def validate(self) -> None:
@@ -97,6 +115,7 @@ class ArchSpec:
             registers_per_pe=self.registers_per_pe,
             pe_classes=self.pe_classes,
             mem_ports=self.mem_ports,
+            registers_by_class=self.registers_by_class,
         )
 
     def cgra(self) -> CGRA:
@@ -121,6 +140,10 @@ class ArchSpec:
                 ),
                 "mem_ports": self.mem_ports,
                 "registers_per_pe": self.registers_per_pe,
+                "registers_by_class": (
+                    None if self.registers_by_class is None
+                    else dict(self.registers_by_class)
+                ),
             },
             sort_keys=True,
             separators=(",", ":"),
@@ -141,6 +164,10 @@ class ArchSpec:
                 ),
                 "mem_ports": self.mem_ports,
                 "registers_per_pe": self.registers_per_pe,
+                "registers_by_class": (
+                    None if self.registers_by_class is None
+                    else dict(self.registers_by_class)
+                ),
             },
             indent=2,
         )
@@ -163,6 +190,7 @@ class ArchSpec:
                 ),
                 mem_ports=d.get("mem_ports"),
                 registers_per_pe=d.get("registers_per_pe", 8),
+                registers_by_class=d.get("registers_by_class"),
             )
         except (KeyError, TypeError, AttributeError) as exc:
             raise ValueError(f"malformed ArchSpec JSON: {exc!r}") from None

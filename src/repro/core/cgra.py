@@ -98,12 +98,31 @@ class CGRA:
     pe_classes: tuple[tuple[str, ...], ...] | None = None
     # max memory ops per cycle grid-wide; None = one port per mem-capable PE
     mem_ports: int | None = None
+    # per-capability-class register-file override, ((class, count), ...);
+    # a dict is accepted and normalised. None = the scalar registers_per_pe
+    registers_by_class: tuple[tuple[str, int], ...] | None = None
 
     def __post_init__(self) -> None:
         if self.rows < 1 or self.cols < 1:
             raise ValueError("CGRA must have at least one PE")
         if self.topology not in _TOPOLOGIES:
             raise ValueError(f"unknown topology {self.topology!r}")
+        if self.registers_by_class is not None:
+            # normalise dicts (and unsorted tuples) so equality/hashing work
+            items = (self.registers_by_class.items()
+                     if isinstance(self.registers_by_class, dict)
+                     else self.registers_by_class)
+            norm = tuple(sorted((str(c), int(n)) for c, n in items))
+            for c, n in norm:
+                if c not in CAP_CLASSES:
+                    raise ValueError(
+                        f"registers_by_class: unknown capability class {c!r}"
+                    )
+                if n < 1:
+                    raise ValueError(
+                        f"registers_by_class[{c!r}] must be >= 1, got {n}"
+                    )
+            object.__setattr__(self, "registers_by_class", norm)
         if self.pe_classes is not None:
             if len(self.pe_classes) != self.num_pes:
                 raise ValueError(
@@ -241,6 +260,29 @@ class CGRA:
         if cls == "mem" and self.mem_ports is not None:
             cap = min(cap, self.mem_ports)
         return cap
+
+    @cached_property
+    def _registers_at(self) -> tuple[int, ...]:
+        overrides = dict(self.registers_by_class or ())
+        out = []
+        for pe in range(self.num_pes):
+            classes = (CAP_CLASSES if self.pe_classes is None
+                       else self.pe_classes[pe])
+            out.append(max(
+                overrides.get(c, self.registers_per_pe) for c in classes
+            ))
+        return tuple(out)
+
+    def registers_at(self, pe: int) -> int:
+        """Register-file size of PE ``pe``.
+
+        ``registers_by_class`` (core/arch: SAT-MapIt-style machines size
+        memory-PE buffers differently) overrides the scalar
+        ``registers_per_pe`` per capability class; a PE carrying several
+        classes gets the largest file its classes demand. Without overrides
+        every PE answers ``registers_per_pe`` — the paper's machine.
+        """
+        return self._registers_at[pe]
 
     def unsupported_ops(self, dfg) -> list[str]:
         """Ops of ``dfg`` that no PE (or port budget) can ever execute.

@@ -91,11 +91,13 @@ class Mapping:
 
         ``registers=True`` (the default) additionally runs the simulator's
         register-pressure probe and reports a violation when the steady-state
-        live-value count on any PE exceeds ``cgra.registers_per_pe`` — the
-        bound used to be modelled but unconstrained (paper §V-3). The mapper
-        itself validates with ``registers=False``: it only *guarantees* the
-        bound when asked via ``max_register_pressure``, and a caller probing
-        an already-found mapping should see the violation, not a crash.
+        live-value count on any PE exceeds that PE's register bound
+        (``cgra.registers_at(pe)`` — per-capability-class when the arch
+        declares ``registers_by_class``, the scalar ``registers_per_pe``
+        otherwise; paper §V-3). The mapper itself validates with
+        ``registers=False``: it only *guarantees* the bound when asked via
+        ``max_register_pressure``, and a caller probing an already-found
+        mapping should see the violation, not a crash.
         """
         errs = check_time_solution(
             self.dfg, self.cgra, TimeSolution(self.ii, self.t_abs),
@@ -106,14 +108,14 @@ class Mapping:
         )
         if registers and not errs:
             # simulate imports this module for Mapping: import lazily
-            from .simulate import check_register_pressure
+            from .simulate import register_pressure_by_pe
 
-            pressure = check_register_pressure(self)
-            if pressure > self.cgra.registers_per_pe:
-                errs.append(
-                    f"register pressure {pressure} > registers_per_pe "
-                    f"{self.cgra.registers_per_pe}"
-                )
+            for pe, pressure in sorted(register_pressure_by_pe(self).items()):
+                bound = self.cgra.registers_at(pe)
+                if pressure > bound:
+                    errs.append(
+                        f"register pressure {pressure} > {bound} on PE {pe}"
+                    )
         return errs
 
     def pretty(self) -> str:
@@ -134,6 +136,7 @@ class Mapping:
 class MapperStats:
     time_phase_s: float = 0.0
     space_phase_s: float = 0.0
+    validate_s: float = 0.0          # independent re-validation of mappings
     total_s: float = 0.0
     time_solutions_tried: int = 0
     mono_failures: int = 0
@@ -143,6 +146,7 @@ class MapperStats:
     rec_ii: int = -1
     backend: str = ""
     rounds: int = 0
+    windows_opened: int = 0          # (II, slack) windows that got a solver
     cache_hit: bool = False          # served from the in-process LRU
     disk_cache_hit: bool = False     # served from the persistent disk cache
     space_nodes_visited: int = 0
@@ -233,7 +237,50 @@ def default_max_ii(m_ii: int) -> int:
     return max(m_ii * 4, m_ii + 8)
 
 
-def map_dfg(
+def map_dfg(dfg: DFG, cgra: CGRA, *, should_stop=None, **kwargs) -> MapResult:
+    """Map ``dfg`` onto ``cgra`` — compatibility shim over ``repro.api``.
+
+    The stable entry point is now the :mod:`repro.api` layer (DESIGN.md §11):
+    every keyword this function historically accepted is a field of
+    :class:`repro.api.CompileOptions`, and this shim simply builds one and
+    delegates — ``map_dfg(dfg, cgra, **kw)`` and
+    ``Compiler(cgra, resolve_options(**kw)).compile(dfg)`` take the identical
+    search path (the parity tests in ``tests/test_api.py`` pin this
+    bit-for-bit). Unknown keywords raise ``TypeError`` via the options
+    dataclass; statically-invalid combinations raise ``ValueError`` from
+    ``CompileOptions.validate``.
+
+    Example — map the paper's running example onto a 2×2 mesh::
+
+        from repro.core import CGRA, map_dfg, running_example
+
+        res = map_dfg(running_example(), CGRA(2, 2))
+        assert res.ok and res.mapping.ii == 4          # paper Fig. 2b
+        print(res.mapping.pretty())                    # kernel table
+
+    ``should_stop`` (a zero-arg cancellation callable) is not part of the
+    serialisable options and stays a direct argument. See
+    :func:`_map_dfg_impl` for the full option reference.
+    """
+    # lazy by design: the api layer imports this module, not vice versa
+    from ..api.options import MAPPER_FIELDS, CompileOptions
+
+    unknown = sorted(set(kwargs) - set(MAPPER_FIELDS))
+    if unknown:
+        # service-only CompileOptions fields (jobs, deadline_s, ...) must
+        # fail here exactly like the historical signature's TypeError did —
+        # silently ignoring a caller's budget/profile would be worse
+        raise TypeError(
+            f"map_dfg() got unexpected keyword arguments: {', '.join(unknown)}"
+        )
+    opts = CompileOptions(**kwargs)
+    opts.validate()
+    return _map_dfg_impl(
+        dfg, cgra, should_stop=should_stop, **opts.mapper_kwargs()
+    )
+
+
+def _map_dfg_impl(
     dfg: DFG,
     cgra: CGRA,
     *,
@@ -254,9 +301,9 @@ def map_dfg(
     should_stop=None,
     seed: int = 0,
 ) -> MapResult:
-    """Map ``dfg`` onto ``cgra`` with the decoupled TIME→SPACE pipeline.
+    """The portfolio-search engine behind ``map_dfg``/``Compiler.compile``.
 
-    This is the library's main entry point. It sweeps (II, slack) *windows*
+    It sweeps (II, slack) *windows*
     starting at mII = max(ResII, RecII): for each window the time backend
     proposes a *label partition* (kernel step ``t mod II`` per node, plus a
     *fold* ``t div II``), and the monomorphism engine tries to embed it into
@@ -318,6 +365,13 @@ def map_dfg(
     # swallowed by the per-window infeasibility handler below
     backend = resolve_backend_name(backend)
     stats = MapperStats()
+
+    def timed_validate(mapping: Mapping) -> list[str]:
+        t0 = _time.perf_counter()
+        errs = mapping.validate(connectivity=connectivity, registers=False)
+        stats.validate_s += _time.perf_counter() - t0
+        return errs
+
     if cgra.heterogeneous:
         # fail fast on structurally impossible targets (an op class with no
         # capable PE) instead of exhausting the whole (II, slack) sweep
@@ -343,7 +397,7 @@ def map_dfg(
             ii, t_abs, placement = hit
             mapping = Mapping(dfg=dfg, cgra=cgra, ii=ii, t_abs=t_abs,
                               placement=placement)
-            if not mapping.validate(connectivity=connectivity, registers=False):
+            if not timed_validate(mapping):
                 stats.cache_hit = True
                 stats.final_ii = ii
                 stats.backend = "cache"
@@ -366,7 +420,7 @@ def map_dfg(
                 ii, t_abs, placement = dhit
                 mapping = Mapping(dfg=dfg, cgra=cgra, ii=ii, t_abs=t_abs,
                                   placement=placement)
-                if mapping.validate(connectivity=connectivity, registers=False):
+                if timed_validate(mapping):
                     # schema-valid but semantically invalid: drop it so it
                     # cannot poison every future cold lookup, try higher IIs
                     disk.invalidate(base_key, ii)
@@ -405,7 +459,7 @@ def map_dfg(
         stats.time_phase_s += sum(s.stats.solver_time_s for s in solvers)
         stats.total_s = _time.perf_counter() - start
         if mapping is not None:
-            errs = mapping.validate(connectivity=connectivity, registers=False)
+            errs = timed_validate(mapping)
             if errs:  # defensive: should be impossible
                 raise AssertionError(f"mapper produced invalid mapping: {errs}")
             stats.final_ii = mapping.ii
@@ -551,6 +605,7 @@ def map_dfg(
                     w.infeasible = True  # window can't hold the critical path
                     continue
                 solvers.append(w.solver)
+                stats.windows_opened += 1
                 stats.backend = w.solver.stats.backend
             # 1) retry cached partitions with this round's bigger space budget
             if rnd > 0 and w.pending:

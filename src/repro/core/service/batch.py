@@ -31,6 +31,20 @@ from ..cgra import CGRA
 from ..dfg import DFG
 from ..mapper import MapResult, map_dfg
 
+
+def _as_mapper_kwargs(options) -> dict:
+    """Normalise per-job/batch options: a plain kwarg dict passes through, a
+    typed ``repro.api.CompileOptions`` contributes its mapper fields.
+
+    Duck-typed on ``mapper_kwargs`` rather than importing the api layer —
+    ``repro.api`` imports this module, so a type import would cycle.
+    """
+    if options is None:
+        return {}
+    if isinstance(options, dict):
+        return dict(options)
+    return options.mapper_kwargs()
+
 # Worker-side stop event, installed by the pool initializer. Lives in a
 # module global because multiprocessing primitives can only be inherited at
 # process creation, not pickled per task.
@@ -53,15 +67,16 @@ def _should_stop():
 class CompileJob:
     """One unit of batch work: a DFG, a target CGRA, per-job overrides.
 
-    ``options`` is forwarded to :func:`repro.core.mapper.map_dfg` verbatim
-    (e.g. ``{"max_slack": 2, "max_register_pressure": 8}``) and wins over the
-    batch-level defaults.
+    ``options`` is forwarded to :func:`repro.core.mapper.map_dfg` and wins
+    over the batch-level defaults: either a kwarg dict (e.g.
+    ``{"max_slack": 2, "max_register_pressure": 8}``) or a typed
+    :class:`repro.api.CompileOptions` (its mapper fields are used).
     """
 
     dfg: DFG
     cgra: CGRA
     name: str = ""
-    options: dict = field(default_factory=dict)
+    options: dict = field(default_factory=dict)  # or repro.api.CompileOptions
 
     def __post_init__(self) -> None:
         if not self.name:
@@ -70,7 +85,14 @@ class CompileJob:
 
 @dataclass
 class JobReport:
-    """Per-job outcome row of a :class:`CompileReport` (JSON-friendly)."""
+    """Per-job outcome row of a :class:`CompileReport` (JSON-friendly).
+
+    Carries the full mapper telemetry (phase timings, search trace) plus —
+    when the job succeeded — the raw ``t_abs``/``placement`` arrays, so the
+    API layer (``repro.api.CompileResult.from_job_report``) can reconstruct
+    the complete :class:`~repro.core.mapper.Mapping` on the caller's side of
+    the process boundary without re-solving.
+    """
 
     name: str
     ok: bool
@@ -84,7 +106,17 @@ class JobReport:
     cancelled: bool = False
     time_phase_s: float = 0.0
     space_phase_s: float = 0.0
+    validate_s: float = 0.0
     mono_failures: int = 0
+    res_ii: int = -1
+    rec_ii: int = -1
+    rounds: int = 0
+    windows_opened: int = 0
+    time_solutions_tried: int = 0
+    space_nodes_visited: int = 0
+    # the mapping itself (success only); excluded from as_dict row payloads
+    t_abs: list[int] | None = None
+    placement: list[int] | None = None
 
     @property
     def solved(self) -> bool:
@@ -153,7 +185,16 @@ def _job_report(job: CompileJob, res: MapResult, wall_s: float) -> JobReport:
         reason=res.reason,
         time_phase_s=res.stats.time_phase_s,
         space_phase_s=res.stats.space_phase_s,
+        validate_s=res.stats.validate_s,
         mono_failures=res.stats.mono_failures,
+        res_ii=res.stats.res_ii,
+        rec_ii=res.stats.rec_ii,
+        rounds=res.stats.rounds,
+        windows_opened=res.stats.windows_opened,
+        time_solutions_tried=res.stats.time_solutions_tried,
+        space_nodes_visited=res.stats.space_nodes_visited,
+        t_abs=list(res.mapping.t_abs) if res.ok else None,
+        placement=list(res.mapping.placement) if res.ok else None,
     )
 
 
@@ -171,7 +212,7 @@ def _run_job(job: CompileJob, defaults: dict, stop=None) -> JobReport:
     it is derived from the inherited stop event (:func:`_run_job_pooled`); in
     the inline path it is the caller's ``cancel.is_set``.
     """
-    opts = {**defaults, **job.options}
+    opts = {**defaults, **_as_mapper_kwargs(job.options)}
     if stop is not None:
         if stop():
             return _cancelled_report(job, "cancelled before start")
@@ -243,10 +284,11 @@ def compile_many(
       jobs are dropped and running jobs finish early at their next budget
       check, reported with ``cancelled=True``.
     * ``map_options`` — extra ``map_dfg`` kwargs applied to every job
-      (overridden by each job's own ``options``).
+      (overridden by each job's own ``options``): a dict, or a typed
+      :class:`repro.api.CompileOptions` whose mapper fields are forwarded.
     """
     t0 = _time.perf_counter()
-    defaults: dict = dict(map_options or {})
+    defaults: dict = _as_mapper_kwargs(map_options)
     defaults.setdefault("use_cache", use_cache)
     defaults.setdefault("cache_dir", cache_dir)
     if deterministic:

@@ -255,15 +255,29 @@ def check_equivalence(
     return rep
 
 
-def check_register_pressure(mapping: Mapping, *, num_iters: int = 8) -> int:
-    """Max simultaneous live values on any PE (paper assumes this fits)."""
+def register_pressure_by_pe(
+    mapping: Mapping, *, num_iters: int = 8
+) -> dict[int, int]:
+    """Max simultaneous live values per PE (only PEs with pressure > 0).
+
+    The per-PE resolution matters on heterogeneous register files
+    (``CGRA.registers_at`` / ``ArchSpec.registers_by_class``):
+    ``Mapping.validate`` compares each PE's pressure against that PE's own
+    bound instead of one grid-wide scalar.
+    """
     inputs = {
         v: [1.0] * num_iters
         for v in mapping.dfg.nodes
         if mapping.dfg.ops[v] == "input"
     }
     rep = execute_mapping(mapping, inputs, num_iters)
-    return max(rep.max_register_pressure.values(), default=0)
+    return rep.max_register_pressure
+
+
+def check_register_pressure(mapping: Mapping, *, num_iters: int = 8) -> int:
+    """Max simultaneous live values on any PE (paper assumes this fits)."""
+    by_pe = register_pressure_by_pe(mapping, num_iters=num_iters)
+    return max(by_pe.values(), default=0)
 
 
 def _topo(dfg: DFG) -> list[int]:

@@ -9,9 +9,10 @@ full or --reduced.
       --requests 16 --batch 4 --prompt-len 32 --gen 16
 
 ``--premap-kernels SIZE`` warms the node before serving: the CGRA kernel
-suite is batch-compiled onto a SIZE×SIZE grid through the compilation
-service (``repro.core.service.compile_many``), against the persistent
-mapping cache (``--cache-dir`` / ``$REPRO_CACHE_DIR``). A warm restart then
+suite is batch-compiled onto a SIZE×SIZE grid through the compiler API
+(``repro.api.Compiler.compile_batch``, "fast" profile), against the
+persistent mapping cache (``--cache-dir`` / ``$REPRO_CACHE_DIR``). A warm
+restart then
 boots without re-solving a single mapping — the production pattern the
 service layer exists for (DESIGN.md §8).
 """
@@ -52,19 +53,23 @@ def serve_batch(spec, params, prompts: np.ndarray, gen: int, cache_len: int):
 
 
 def premap_kernels(size: int, jobs: int, cache_dir: str | None) -> None:
-    """Boot-time warm-up: batch-map the kernel suite via the compile service."""
-    from repro.core.cgra import CGRA
+    """Boot-time warm-up: batch-map the kernel suite via the compiler API."""
+    from repro.api import Compiler, resolve_options
     from repro.core.benchsuite import load_suite
-    from repro.core.service import CompileJob, compile_many
+    from repro.core.cgra import CGRA
 
-    cgra = CGRA(size, size)
-    batch = [CompileJob(dfg, cgra) for dfg in load_suite().values()]
-    report = compile_many(batch, jobs=jobs, deadline_s=30, cache_dir=cache_dir)
-    c = report.cache_counters
+    compiler = Compiler(
+        CGRA(size, size),
+        resolve_options("fast", jobs=jobs, deadline_s=30.0,
+                        cache_dir=cache_dir),
+    )
+    batch = compiler.compile_batch(list(load_suite().values()))
+    c = batch.cache_counters
     print(
-        f"premap: {len(batch)} kernels on {cgra} in {report.wall_s:.2f}s "
-        f"({report.num_workers} workers) — {c['solved']} solved, "
-        f"{c['memory_hits'] + c['disk_hits']} cache hits, {c['failed']} failed"
+        f"premap: {len(batch)} kernels on {compiler.cgra} in "
+        f"{batch.wall_s:.2f}s ({batch.num_workers} workers) — "
+        f"{c['solved']} solved, {c['memory_hits'] + c['disk_hits']} cache "
+        f"hits, {c['failed']} failed"
     )
 
 

@@ -1,0 +1,352 @@
+"""Public ``repro.api`` layer tests (DESIGN.md §11): options resolution +
+JSON round-trip + unknown-key rejection, ``map_dfg``-shim ↔ ``Compiler``
+parity (random kwarg subsets, mappings and telemetry bit-identical), the
+pre-PR golden deterministic 4×4 suite, Compiler sessions (compile /
+compile_batch / compile_racing), and the unified CompileResult schema."""
+
+import hashlib
+import inspect
+import json
+import os
+import random
+
+import pytest
+
+from repro.api import (
+    FAILURE_KINDS,
+    MAPPER_FIELDS,
+    PROFILES,
+    Compiler,
+    CompileOptions,
+    classify_failure,
+    options_from_args,
+    resolve_options,
+)
+from repro.core import CGRA, map_dfg, running_example
+from repro.core.arch import ArchSpec, get_preset
+from repro.core.benchsuite import load_suite
+from repro.core.dfg import DFG, Edge
+from repro.core.mapper import _map_dfg_impl, clear_mapping_cache
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memory_cache():
+    clear_mapping_cache()
+    yield
+    clear_mapping_cache()
+
+
+# ----------------------------------------------------------------- options
+
+def test_options_defaults_match_mapper_signature():
+    """The shim contract: every mapper field exists on ``_map_dfg_impl`` with
+    the identical default, so CompileOptions() == a bare map_dfg call."""
+    sig = inspect.signature(_map_dfg_impl)
+    opts = CompileOptions()
+    for f in MAPPER_FIELDS:
+        assert f in sig.parameters, f
+        assert sig.parameters[f].default == getattr(opts, f), f
+    # and nothing mapper-side is missing from the options (should_stop is
+    # the deliberate exception: a callable cannot be serialised)
+    mapper_params = set(sig.parameters) - {"dfg", "cgra", "should_stop"}
+    assert mapper_params == set(MAPPER_FIELDS)
+
+
+def test_options_json_roundtrip():
+    opts = resolve_options("fast", max_slack=1, cache_dir="/tmp/x", seed=7)
+    again = CompileOptions.from_json(opts.to_json())
+    assert again == opts
+    assert again.profile == "fast" and again.max_slack == 1
+
+
+def test_options_unknown_keys_rejected():
+    with pytest.raises(ValueError, match="bogus"):
+        CompileOptions.from_dict({"bogus": 1})
+    with pytest.raises(ValueError, match="bogus"):
+        CompileOptions.from_json('{"bogus": 1, "max_slack": 2}')
+    with pytest.raises(TypeError):
+        CompileOptions(bogus=1)
+    with pytest.raises(TypeError):
+        CompileOptions().replace(bogus=1)
+    with pytest.raises(ValueError, match="malformed"):
+        CompileOptions.from_json("[1, 2]")
+    with pytest.raises(ValueError, match="malformed"):
+        CompileOptions.from_json("{truncated")
+
+
+def test_options_validation_rejects_garbage():
+    with pytest.raises(ValueError, match="connectivity"):
+        CompileOptions(connectivity="loose").validate()
+    with pytest.raises(ValueError, match="backend"):
+        CompileOptions(backend="gurobi").validate()
+    with pytest.raises(ValueError, match="striping"):
+        CompileOptions(window_offset=2, window_stride=2).validate()
+    with pytest.raises(ValueError, match="time_budget_s"):
+        CompileOptions(time_budget_s=0).validate()
+    with pytest.raises(ValueError, match="jobs"):
+        CompileOptions(jobs=0).validate()
+    with pytest.raises(ValueError, match="profile"):
+        CompileOptions(profile="warp-speed").validate()
+
+
+def test_profiles_resolve_and_override():
+    for name in PROFILES:
+        assert resolve_options(name).profile == name
+        PROFILES[name].validate()
+    ci = resolve_options("deterministic-ci")
+    assert ci.deterministic and not ci.use_cache and ci.jobs == 1
+    fast = resolve_options("fast", time_budget_s=5.0)
+    assert fast.time_budget_s == 5.0                      # override wins
+    assert fast.max_slack == PROFILES["fast"].max_slack   # profile value kept
+    with pytest.raises(ValueError, match="unknown profile"):
+        resolve_options("turbo")
+
+
+def test_cli_args_single_definition():
+    """Every CLI resolves flags through the one add_cli_args/resolve_options
+    path; unsupplied flags keep the profile's value."""
+    import argparse
+
+    from repro.api import add_cli_args
+
+    ap = argparse.ArgumentParser()
+    add_cli_args(ap)
+    args = ap.parse_args(["--profile", "fast", "--max-slack", "1",
+                          "--no-cache"])
+    opts = options_from_args(args)
+    assert opts.profile == "fast"
+    assert opts.max_slack == 1                            # flag override
+    assert opts.use_cache is False                        # --no-cache
+    assert opts.time_budget_s == PROFILES["fast"].time_budget_s
+    # no flags at all -> plain defaults
+    opts2 = options_from_args(ap.parse_args([]))
+    assert opts2 == CompileOptions()
+
+
+# ------------------------------------------------------------ shim parity
+
+#: kwarg pool for the random-subset parity trials; every value keeps the
+#: search deterministic and sub-second on the small fixtures below.
+_KWARG_POOL = {
+    "max_slack": [0, 1, 2],
+    "max_ii": [5, 8, 16],
+    "connectivity": ["strict", "paper"],
+    "seed": [1, 3],
+    "max_register_pressure": [6, 8],
+    "window_stride": [2, 3],
+}
+
+
+@pytest.mark.parametrize("trial", range(8))
+def test_shim_and_compiler_parity_random_kwargs(trial):
+    """Property test: ``map_dfg(**kw)`` and ``Compiler(...).compile(dfg)``
+    produce identical mappings AND identical telemetry for random kwarg
+    subsets (deterministic mode, so 'identical' means bit-identical)."""
+    rng = random.Random(trial)
+    kw = {"deterministic": True, "use_cache": False}
+    for key, vals in _KWARG_POOL.items():
+        if rng.random() < 0.5:
+            kw[key] = rng.choice(vals)
+    if trial % 2 == 0:
+        dfg, cgra = running_example(), CGRA(2, 2)
+    else:
+        dfg, cgra = load_suite(names=["bitcount"])["bitcount"], CGRA(3, 3)
+
+    a = map_dfg(dfg, cgra, **kw)
+    b = Compiler(cgra, resolve_options(**kw)).compile(dfg)
+
+    assert a.ok == b.ok, kw
+    assert a.reason == b.reason, kw
+    if a.ok:
+        assert a.mapping.ii == b.ii
+        assert a.mapping.t_abs == b.mapping.t_abs
+        assert a.mapping.placement == b.mapping.placement
+    s, t = a.stats, b.trace
+    assert (s.m_ii, s.res_ii, s.rec_ii) == (b.m_ii, b.res_ii, b.rec_ii)
+    assert s.rounds == t.rounds
+    assert s.windows_opened == t.windows_opened
+    assert s.time_solutions_tried == t.time_solutions_tried
+    assert s.mono_failures == t.mono_failures
+    assert s.space_nodes_visited == t.space_nodes_visited
+    assert s.backend == b.backend
+
+
+def test_shim_rejects_unknown_kwargs():
+    with pytest.raises(TypeError):
+        map_dfg(running_example(), CGRA(2, 2), warp_factor=9)
+    # service-only CompileOptions fields are NOT mapper kwargs: accepting
+    # them silently would drop the caller's budget/profile on the floor
+    for bad in ({"jobs": 4}, {"deadline_s": 1.0}, {"profile": "fast"},
+                {"racing_workers": 2}, {"arch": "paper_homogeneous_4x4"}):
+        with pytest.raises(TypeError, match="unexpected keyword"):
+            map_dfg(running_example(), CGRA(2, 2), **bad)
+
+
+_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data_golden_4x4.json")
+
+
+def _mapping_sha(mapping) -> str:
+    return hashlib.sha1(json.dumps(
+        {"t_abs": mapping.t_abs, "placement": mapping.placement},
+        separators=(",", ":")).encode()).hexdigest()
+
+
+def test_deterministic_4x4_suite_bit_identical_to_pre_pr():
+    """Acceptance gate: the shimmed ``map_dfg`` reproduces the pre-PR
+    deterministic 4×4 suite mappings bit-for-bit (golden hashes were
+    generated at the pre-refactor tree; deterministic mode is
+    load-independent, so equality means the search path is untouched)."""
+    with open(_GOLDEN_PATH) as f:
+        golden = json.load(f)
+    cgra = CGRA(4, 4)
+    suite = load_suite()
+    assert set(golden) == set(suite)
+    for name, dfg in sorted(suite.items()):
+        res = map_dfg(dfg, cgra, deterministic=True, use_cache=False)
+        assert res.ok, f"{name}: {res.reason}"
+        assert res.mapping.ii == golden[name]["ii"], name
+        assert _mapping_sha(res.mapping) == golden[name]["sha1"], name
+
+
+@pytest.mark.parametrize("name", ["bitcount", "gsm", "susan"])
+def test_compiler_matches_golden(name):
+    """The Compiler path lands on the same golden mappings as the shim."""
+    with open(_GOLDEN_PATH) as f:
+        golden = json.load(f)
+    comp = Compiler(CGRA(4, 4), resolve_options("deterministic-ci"))
+    res = comp.compile(load_suite(names=[name])[name])
+    assert res.ok and res.ii == golden[name]["ii"]
+    assert _mapping_sha(res.mapping) == golden[name]["sha1"]
+
+
+# ---------------------------------------------------------------- Compiler
+
+def test_compiler_target_resolution():
+    spec = get_preset("paper_homogeneous_4x4")
+    by_cgra = Compiler(CGRA(4, 4))
+    by_spec = Compiler(spec)
+    by_name = Compiler("paper_homogeneous_4x4")
+    by_opts = Compiler(options=resolve_options(arch="paper_homogeneous_4x4"))
+    assert by_cgra.cgra == by_spec.cgra == by_name.cgra == by_opts.cgra
+    assert by_cgra.spec is None and by_name.spec == spec
+    with pytest.raises(ValueError, match="no target machine"):
+        Compiler()
+    with pytest.raises(TypeError, match="target"):
+        Compiler(42)
+    with pytest.raises(TypeError, match="options"):
+        Compiler(CGRA(2, 2), options=3.14)
+
+
+def test_compiler_session_overrides_do_not_mutate():
+    comp = Compiler(CGRA(2, 2), "deterministic-ci")
+    res = comp.compile(running_example(), seed=5)
+    assert res.ok
+    assert comp.options.seed == 0          # per-call override, session intact
+    with pytest.raises(TypeError):
+        comp.compile(running_example(), bogus=1)
+
+
+def test_compiler_validate_workload():
+    spec = ArchSpec(name="alu_only", rows=2, cols=2,
+                    pe_classes=(("alu",),) * 4)
+    comp = Compiler(spec)
+    mul = DFG(num_nodes=3, ops=["input", "input", "mul"],
+              edges=[Edge(0, 2), Edge(1, 2)])
+    assert comp.validate_workload([mul]) != []
+    assert Compiler(CGRA(2, 2)).validate_workload([mul]) == []
+
+
+def test_compile_batch_rejects_mismatched_names():
+    suite = load_suite(names=["bitcount", "fft"])
+    comp = Compiler(CGRA(4, 4), "deterministic-ci")
+    with pytest.raises(ValueError, match="names"):
+        comp.compile_batch(list(suite.values()), names=["just-one"])
+
+
+def test_compile_batch_rows_and_mapping_reconstruction():
+    suite = load_suite(names=["bitcount", "fft"])
+    comp = Compiler(CGRA(4, 4), "deterministic-ci")
+    batch = comp.compile_batch(list(suite.values()))
+    assert batch.ok and len(batch) == 2
+    for dfg, row in zip(suite.values(), batch):
+        assert row.source == "solve" and row.failure is None
+        # the mapping was reconstructed from the worker row, not re-solved
+        assert row.mapping is not None
+        assert row.mapping.validate() == []
+        direct = comp.compile(dfg)
+        assert row.ii == direct.ii
+        assert row.mapping.t_abs == direct.mapping.t_abs
+        assert row.mapping.placement == direct.mapping.placement
+    d = batch.as_dict()
+    assert d["ok"] and d["cache"]["solved"] == 2
+    assert all(j["failure"] is None for j in d["jobs"])
+
+
+def test_compile_batch_cache_provenance(tmp_path):
+    suite = load_suite(names=["bitcount", "fft"])
+    comp = Compiler(CGRA(4, 4), resolve_options(cache_dir=str(tmp_path),
+                                                jobs=1, deadline_s=30.0))
+    cold = comp.compile_batch(list(suite.values()))
+    assert cold.cache_counters["solved"] == 2
+    clear_mapping_cache()
+    warm = comp.compile_batch(list(suite.values()))
+    assert warm.cache_counters["disk_hits"] == 2
+    assert [r.ii for r in warm] == [r.ii for r in cold]
+    assert all(r.source == "disk" for r in warm)
+    assert comp.cache is not None and len(comp.cache) == 2
+    assert comp.cache is comp.cache       # one stable handle per session
+    assert Compiler(CGRA(2, 2), "deterministic-ci").cache is None
+
+
+def test_compile_racing_deterministic_falls_back():
+    comp = Compiler(CGRA(2, 2), "deterministic-ci")
+    res = comp.compile_racing(running_example(), workers=4)
+    assert res.ok and res.ii == 4
+    assert res.mapping.validate() == []
+
+
+# ------------------------------------------------------------ result schema
+
+def test_failure_code_infeasible():
+    spec = ArchSpec(name="alu_only", rows=2, cols=2,
+                    pe_classes=(("alu",),) * 4)
+    mul = DFG(num_nodes=3, ops=["input", "input", "mul"],
+              edges=[Edge(0, 2), Edge(1, 2)])
+    res = Compiler(spec, "deterministic-ci").compile(mul)
+    assert not res.ok and res.failure == "infeasible"
+    assert res.source is None and res.ii is None
+    assert res.as_dict()["failure"] == "infeasible"
+
+
+def test_failure_code_exhausted_search():
+    d = load_suite(names=["bitcount"])["bitcount"]
+    res = Compiler(CGRA(1, 1), "deterministic-ci").compile(d, max_ii=4)
+    assert not res.ok
+    assert res.failure in ("search-exhausted", "budget-exhausted")
+    assert res.failure in FAILURE_KINDS
+
+
+def test_classify_failure_table():
+    assert classify_failure(True, "") is None
+    assert classify_failure(False, "infeasible by capability: x") == "infeasible"
+    assert classify_failure(False, "time budget exhausted") == "budget-exhausted"
+    assert classify_failure(False, "no mapping up to II=9 within budget") == "budget-exhausted"
+    assert classify_failure(False, "search space exhausted up to II=9") == "search-exhausted"
+    assert classify_failure(False, "anything", cancelled=True) == "cancelled"
+    assert classify_failure(False, "ValueError: bad dfg") == "error"
+    # worker-death rows (pool failures) are exception-typed too
+    assert classify_failure(False, "BrokenProcessPool: a child died") == "error"
+    assert classify_failure(False, "weird") == "unknown"
+
+
+def test_result_phase_timings_cover_pipeline():
+    res = Compiler(CGRA(3, 3), "deterministic-ci").compile(
+        load_suite(names=["gsm"])["gsm"])
+    assert res.ok
+    p = res.phases
+    assert p.time_s > 0 and p.space_s > 0 and p.validate_s > 0
+    assert p.total_s >= p.validate_s
+    row = res.as_dict()
+    assert set(row["phases"]) == {"time_s", "space_s", "validate_s", "total_s"}
+    assert row["source"] == "solve"
+    assert row["trace"]["windows_opened"] >= 1

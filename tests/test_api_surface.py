@@ -1,0 +1,65 @@
+"""Public-API snapshot test (DESIGN.md §11).
+
+``tests/data_api_surface.json`` is the checked-in contract: the exported
+symbol sets of ``repro.api`` and ``repro.core``, the ``CompileOptions``
+field list, the profile names, and the ``CompileResult`` row schema. Any
+drift — a renamed option, a dropped export, a new result key — fails here
+first, forcing a deliberate snapshot update (and a migration note) instead
+of a silent break for downstream users.
+
+To regenerate after an *intentional* change, update the JSON to match the
+assertion messages (every assert compares against the live value).
+"""
+
+import dataclasses
+import json
+import os
+
+import repro.api as api
+import repro.core as core
+from repro.api import PROFILES, CompileOptions, CompileResult
+
+_SNAPSHOT_PATH = os.path.join(os.path.dirname(__file__),
+                              "data_api_surface.json")
+
+with open(_SNAPSHOT_PATH) as f:
+    SNAPSHOT = json.load(f)
+
+
+def test_api_exports_match_snapshot():
+    assert sorted(api.__all__) == SNAPSHOT["api_exports"]
+    # everything advertised is actually importable
+    for name in api.__all__:
+        assert hasattr(api, name), name
+
+
+def test_core_exports_match_snapshot():
+    assert sorted(core.__all__) == SNAPSHOT["core_exports"]
+
+
+def test_compile_options_field_set_matches_snapshot():
+    """Field ORDER matters too: it is the positional-construction contract
+    and the readability grouping documented in DESIGN.md §11.1."""
+    fields = [f.name for f in dataclasses.fields(CompileOptions)]
+    assert fields == SNAPSHOT["compile_options_fields"]
+
+
+def test_profiles_match_snapshot():
+    assert sorted(PROFILES) == SNAPSHOT["profiles"]
+
+
+def test_result_row_schema_matches_snapshot():
+    row = CompileResult(name="x", ok=False).as_dict()
+    assert sorted(row) == SNAPSHOT["result_row_keys"]
+    assert sorted(row["phases"]) == SNAPSHOT["result_phase_keys"]
+    assert sorted(row["trace"]) == SNAPSHOT["result_trace_keys"]
+
+
+def test_top_level_lazy_exports():
+    """``repro`` lazily re-exports the api surface (no heavy imports on
+    plain ``import repro``)."""
+    import repro
+
+    assert repro.Compiler is api.Compiler
+    assert repro.CompileOptions is CompileOptions
+    assert repro.resolve_options is api.resolve_options

@@ -250,6 +250,79 @@ def test_validate_surfaces_register_pressure():
     assert starved.validate(registers=False) == []
 
 
+def test_registers_by_class_roundtrip_and_hash():
+    spec = ArchSpec(
+        name="memfat", rows=2, cols=2,
+        pe_classes=(("alu", "mem", "mul"), ("alu",),
+                    ("alu", "mem", "mul"), ("alu",)),
+        registers_by_class={"mem": 16},
+    )
+    spec.validate()
+    again = ArchSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.spec_hash() == spec.spec_hash()
+    import dataclasses
+    resized = dataclasses.replace(spec, registers_by_class={"mem": 12})
+    assert resized.spec_hash() != spec.spec_hash()
+    # the dict form normalises to the canonical tuple form
+    assert spec.registers_by_class == (("mem", 16),)
+    with pytest.raises(ValueError, match="unknown capability class"):
+        ArchSpec(name="x", rows=1, cols=1,
+                 registers_by_class={"warp": 4}).validate()
+    with pytest.raises(ValueError, match=">= 1"):
+        ArchSpec(name="x", rows=1, cols=1,
+                 registers_by_class={"mem": 0}).validate()
+
+
+def test_registers_at_per_pe():
+    spec = ArchSpec(
+        name="memfat", rows=2, cols=2,
+        pe_classes=(("alu", "mem", "mul"), ("alu",),
+                    ("alu", "mem", "mul"), ("alu",)),
+        registers_per_pe=4,
+        registers_by_class={"mem": 16},
+    )
+    cgra = spec.cgra()
+    # mem-capable PEs (left column) get the class override, pure-ALU PEs
+    # keep the scalar default
+    assert cgra.registers_at(0) == 16 and cgra.registers_at(2) == 16
+    assert cgra.registers_at(1) == 4 and cgra.registers_at(3) == 4
+    # homogeneous grid: every PE carries every class, so the largest wins
+    assert CGRA(2, 2, registers_by_class={"mem": 16}).registers_at(3) == 16
+    # the scalar form is untouched without overrides (the paper machine)
+    assert all(CGRA(2, 2).registers_at(p) == 8 for p in range(4))
+    # the shipped SAT-MapIt preset sizes memory-PE buffers at 16
+    sm = get_preset("satmapit_edge_mem_4x4").cgra()
+    assert sm.registers_at(0) == 16          # border PE: mem-capable
+    assert sm.registers_at(sm.pe_index(1, 1)) == 8   # interior: compute-only
+
+
+def test_validate_respects_per_class_register_files():
+    """Mapping.validate compares each PE's pressure against that PE's own
+    bound: a class-level register override can clear a violation the scalar
+    bound would report (and vice versa)."""
+    from repro.core.simulate import check_register_pressure
+
+    res = map_dfg(running_example(), CGRA(2, 2), deterministic=True)
+    assert res.ok
+    m = res.mapping
+    pressure = check_register_pressure(m)
+    starved = Mapping(
+        dfg=m.dfg, cgra=CGRA(2, 2, registers_per_pe=pressure - 1),
+        ii=m.ii, t_abs=m.t_abs, placement=m.placement,
+    )
+    assert any("register pressure" in e for e in starved.validate())
+    # same starved scalar, but an alu-class override restores the headroom
+    # (homogeneous PEs carry the alu class, and the per-PE bound is the max)
+    relieved = Mapping(
+        dfg=m.dfg,
+        cgra=CGRA(2, 2, registers_per_pe=pressure - 1,
+                  registers_by_class={"alu": pressure}),
+        ii=m.ii, t_abs=m.t_abs, placement=m.placement,
+    )
+    assert relieved.validate() == []
+
+
 # -------------------------------------- satellite: topology-gated triangles
 
 def _triangle_dfg() -> DFG:
