@@ -8,16 +8,25 @@ on any op placed on an incapable PE, so a passing run certifies placement
 legality beyond the mapper's own bookkeeping.
 
 Rows are the unified ``repro.api.CompileResult`` schema plus
-``arch``/``nodes``/``verified``. Emits ``BENCH_hetero.json`` so CI can gate
-II/wall-time regressions on non-homogeneous targets, mirroring
-``BENCH_table3.json`` for the paper grid.
+``arch``/``nodes``/``verified``. A final *route-through* row maps the
+``route_stress`` kernel onto the bank-split ``onehop_split_4x4`` preset with
+``max_route_hops=2`` (DESIGN.md §12) — unmappable without mov insertion, so
+the row only verifies when the route path actually engaged. Emits
+``BENCH_hetero.json`` so CI can gate II/wall-time regressions on
+non-homogeneous targets, mirroring ``BENCH_table3.json`` for the paper grid.
 """
 
 from __future__ import annotations
 
 from repro.api import Compiler, CompileOptions, CompileResult, resolve_options
-from repro.core.benchsuite import load_suite
+from repro.core.benchsuite import load_suite, route_stress_dfg
 from repro.core.simulate import check_equivalence
+
+#: The route-through leg: the bank-split one-hop machine on which the demo
+#: kernel is unmappable at hops=0 and must map (and verify by execution) at
+#: hops<=2 — the CI-gated acceptance row for DESIGN.md §12.
+ROUTE_ARCH = "onehop_split_4x4"
+ROUTE_HOPS = 2
 
 
 def run(
@@ -30,9 +39,9 @@ def run(
     options = options or resolve_options()
     compiler = Compiler(arch, options.replace(time_budget_s=budget_s))
     spec = compiler.spec
-    suite = load_suite(names=benchmarks)
+    workload = dict(load_suite(names=benchmarks))
     rows = []
-    for name, dfg in suite.items():
+    for name, dfg in workload.items():
         problems = spec.validate_for(dfg)
         if problems:
             # pre-validation failure in the SAME unified row schema: a
@@ -59,6 +68,33 @@ def run(
                 row["reason"] = f"verification failed: {exc}"
         rows.append(row)
         print(row, flush=True)
+
+    # route-through leg (always included): the demo kernel on the bank-split
+    # one-hop preset, mapped with mov insertion and execution-verified. Its
+    # row rides the same CI gate (ok + verified) as the suite rows.
+    route_comp = Compiler(
+        ROUTE_ARCH,
+        options.replace(time_budget_s=budget_s, max_route_hops=ROUTE_HOPS),
+    )
+    dfg = route_stress_dfg()
+    res = route_comp.compile(dfg)
+    row = res.as_dict()
+    row.update({
+        "nodes": dfg.num_nodes,
+        "arch": route_comp.spec.name,
+        "max_route_hops": ROUTE_HOPS,
+        "verified": False,
+    })
+    if res.ok:
+        try:
+            check_equivalence(res.mapping)
+            row["verified"] = res.route_movs > 0   # a direct map would mean
+            # the preset stopped exercising the route path — fail the gate
+        except AssertionError as exc:
+            row["reason"] = f"verification failed: {exc}"
+    rows.append(row)
+    print(row, flush=True)
+
     return {
         "arch": {"name": spec.name, "spec_hash": spec.spec_hash(),
                  "rows": spec.rows, "cols": spec.cols,

@@ -183,7 +183,8 @@ class Compiler:
             map_options=opts.batch_kwargs(),
         )
         result = BatchResult.from_report(
-            report, pairs=[(job.dfg, job.cgra) for job in batch]
+            report, pairs=[(job.dfg, job.cgra) for job in batch],
+            max_register_pressure=opts.max_register_pressure,
         )
         result.wall_s = _time.perf_counter() - t0
         return result

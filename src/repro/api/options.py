@@ -51,6 +51,7 @@ MAPPER_FIELDS = (
     "max_retries_per_window",
     "window_timeout_s",
     "max_register_pressure",
+    "max_route_hops",
     "deterministic",
     "use_cache",
     "cache_dir",
@@ -99,7 +100,8 @@ class CompileOptions:
     max_retries_per_window: int = 8     # pending-partition retry width
     window_timeout_s: float = 10.0      # per time-solver-call wall cap
     # -------------------------------------------------------- constraints
-    max_register_pressure: int | None = None   # reject mappings above this
+    max_register_pressure: int | None = None   # per-PE effective bound: min(this, registers_at(pe))
+    max_route_hops: int = 0             # route-through mov budget per edge (0 = direct only)
     # -------------------------------------------------------- determinism
     deterministic: bool = False         # step-budgeted reproducible mode (§6.3)
     # ------------------------------------------------------- cache policy
@@ -135,6 +137,10 @@ class CompileOptions:
             )
         if self.max_slack < 0:
             raise ValueError(f"max_slack must be >= 0, got {self.max_slack}")
+        if self.max_route_hops < 0:
+            raise ValueError(
+                f"max_route_hops must be >= 0, got {self.max_route_hops}"
+            )
         if self.max_ii is not None and self.max_ii < 1:
             raise ValueError(f"max_ii must be >= 1, got {self.max_ii}")
         if self.time_budget_s <= 0:
@@ -282,6 +288,7 @@ _CLI_FIELDS = (
     "seed",
     "time_budget_s",
     "max_register_pressure",
+    "max_route_hops",
     "deterministic",
     "use_cache",
     "cache_dir",
@@ -315,7 +322,13 @@ def add_cli_args(parser: argparse.ArgumentParser) -> None:
                    dest="time_budget_s", help="wall budget per compile")
     g.add_argument("--max-register-pressure", type=int, default=None,
                    dest="max_register_pressure",
-                   help="reject mappings exceeding this per-PE live-value count")
+                   help="reject mappings exceeding min(this, registers_at(pe)) "
+                        "live values on any PE")
+    g.add_argument("--max-route-hops", type=int, default=None,
+                   dest="max_route_hops",
+                   help="allow routing a dataflow edge through up to this many "
+                        "intermediate mov PEs when no direct embedding exists "
+                        "(default 0 = paper behaviour)")
     g.add_argument("--deterministic", action="store_true", default=None,
                    help="step-budgeted reproducible mode (bypasses caches)")
     g.add_argument("--no-cache", action="store_false", default=None,

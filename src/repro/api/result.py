@@ -20,6 +20,7 @@ Failure codes (:data:`FAILURE_KINDS`):
 
 from __future__ import annotations
 
+import dataclasses
 import re
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING
@@ -155,6 +156,8 @@ class CompileResult:
     failure: str | None = None
     reason: str = ""
     cancelled: bool = False
+    #: route-through movs spliced into the mapping (0 = direct embedding)
+    route_movs: int = 0
     mapping: "Mapping | None" = None
 
     # ------------------------------------------------------------ constructors
@@ -194,26 +197,61 @@ class CompileResult:
             ),
             failure=classify_failure(res.ok, res.reason),
             reason=res.reason,
+            route_movs=res.mapping.num_route_movs if res.ok else 0,
             mapping=res.mapping,
         )
 
     @classmethod
     def from_job_report(
         cls, job: "JobReport", dfg: "DFG | None" = None,
-        cgra: "CGRA | None" = None,
+        cgra: "CGRA | None" = None, *,
+        max_register_pressure: int | None = None,
     ) -> "CompileResult":
         """Lift a service row; reconstructs the Mapping when the worker
-        shipped ``t_abs``/``placement`` back and the caller provides the
-        (unpickled-once) DFG/CGRA pair."""
+        shipped ``t_abs``/``placement`` (plus any route-through spec) back
+        and the caller provides the (unpickled-once) DFG/CGRA pair.
+
+        Reconstructed mappings are re-validated on the caller's side with
+        the same checks the direct path runs — structure always, and the
+        per-PE register guarantee (``min(max_register_pressure,
+        registers_at(pe))``) whenever the batch requested one — so a stale
+        worker cache or a version-skewed worker can never make the batch
+        path accept what ``Compiler.compile`` would reject. A row failing
+        re-validation is flipped to a failure (``failure == "error"``)."""
         mapping = None
         if (job.ok and dfg is not None and cgra is not None
                 and job.t_abs is not None and job.placement is not None
                 and job.ii is not None):
-            from ..core.mapper import Mapping
+            from ..core.dfg import splice_routes
+            from ..core.mapper import Mapping, _pressure_offenders
 
-            mapping = Mapping(dfg=dfg, cgra=cgra, ii=job.ii,
-                              t_abs=list(job.t_abs),
-                              placement=list(job.placement))
+            try:
+                routes = []
+                if job.routes:
+                    dfg, routes = splice_routes(
+                        dfg, [tuple(r) for r in job.routes]
+                    )
+                mapping = Mapping(dfg=dfg, cgra=cgra, ii=job.ii,
+                                  t_abs=list(job.t_abs),
+                                  placement=list(job.placement),
+                                  routes=routes)
+                errs = mapping.validate(registers=False)
+                if not errs and max_register_pressure is not None:
+                    errs = [
+                        f"register pressure over effective bound on PE {pe}"
+                        for pe in _pressure_offenders(
+                            mapping, max_register_pressure)
+                    ]
+            except (ValueError, IndexError) as exc:
+                errs = [f"malformed worker mapping: {exc}"]
+            if errs:
+                job = dataclasses.replace(
+                    job, ok=False, ii=None, t_abs=None, placement=None,
+                    routes=None,
+                    reason="ValidationError: worker mapping rejected "
+                           f"caller-side: {'; '.join(errs)}",
+                )
+                mapping = None
         if job.ok:
             source = ("memory" if job.cache_hit
                       else "disk" if job.disk_cache_hit else "solve")
@@ -245,6 +283,7 @@ class CompileResult:
             failure=classify_failure(job.ok, job.reason, job.cancelled),
             reason=job.reason,
             cancelled=job.cancelled,
+            route_movs=mapping.num_route_movs if mapping is not None else 0,
             mapping=mapping,
         )
 
@@ -266,6 +305,7 @@ class CompileResult:
             "failure": self.failure,
             "reason": self.reason,
             "cancelled": self.cancelled,
+            "route_movs": self.route_movs,
         }
 
 
@@ -299,14 +339,20 @@ class BatchResult:
 
     @classmethod
     def from_report(
-        cls, report: "CompileReport", pairs=None
+        cls, report: "CompileReport", pairs=None, *,
+        max_register_pressure: int | None = None,
     ) -> "BatchResult":
         """Lift a service ``CompileReport``; ``pairs`` is the matching list
-        of (dfg, cgra) used to reconstruct mappings from worker rows."""
+        of (dfg, cgra) used to reconstruct mappings from worker rows, and
+        ``max_register_pressure`` the batch's per-PE pressure guarantee
+        (rows failing caller-side re-validation become failures)."""
         pairs = pairs or [(None, None)] * len(report.jobs)
         return cls(
             results=[
-                CompileResult.from_job_report(j, dfg, cgra)
+                CompileResult.from_job_report(
+                    j, dfg, cgra,
+                    max_register_pressure=max_register_pressure,
+                )
                 for j, (dfg, cgra) in zip(report.jobs, pairs)
             ],
             wall_s=report.wall_s,

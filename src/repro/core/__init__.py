@@ -11,9 +11,9 @@ specs: capability classes, topology families, memory ports — DESIGN.md §10).
 
 from .arch import ArchSpec, get_preset, list_presets, resolve_arch
 from .cgra import CAP_CLASSES, CGRA, MRRG, op_class
-from .dfg import DFG, Edge, running_example
+from .dfg import DFG, Edge, Route, running_example, splice_routes
 from .mapper import Mapping, MapResult, map_dfg
-from .mono import check_monomorphism, find_monomorphism
+from .mono import check_monomorphism, check_routes, find_monomorphism
 from .schedule import (
     KMS,
     MobilitySchedule,
@@ -34,9 +34,9 @@ from .time_smt import (
 __all__ = [
     "ArchSpec", "get_preset", "list_presets", "resolve_arch",
     "CAP_CLASSES", "op_class",
-    "CGRA", "MRRG", "DFG", "Edge", "running_example",
+    "CGRA", "MRRG", "DFG", "Edge", "Route", "running_example", "splice_routes",
     "Mapping", "MapResult", "map_dfg",
-    "check_monomorphism", "find_monomorphism",
+    "check_monomorphism", "check_routes", "find_monomorphism",
     "KMS", "MobilitySchedule", "alap_schedule", "asap_schedule",
     "min_ii", "mobility_schedule", "rec_ii", "res_ii",
     "TimeSolution", "TimeSolver", "check_time_solution", "available_backends",

@@ -14,6 +14,9 @@ mirroring a machine from the paper or its companion line of work:
   multiplier/divider (the classic area-saving layout); memory everywhere.
 * ``diagonal_20x20`` — a large king-move (diagonal) grid, homogeneous
   capabilities: exercises the non-bipartite-topology path at scale.
+* ``onehop_split_4x4`` — a one-hop grid whose memory and multiplier banks
+  sit on opposite columns, 3 apart: the route-through demo machine
+  (``--max-route-hops``, DESIGN.md §12).
 
 ``list_presets()``/``get_preset()`` are the registry surface the CLIs use.
 """
@@ -65,11 +68,33 @@ def diagonal_20x20() -> ArchSpec:
     return ArchSpec(name="diagonal_20x20", rows=20, cols=20, topology="diagonal")
 
 
+def onehop_split_4x4() -> ArchSpec:
+    """One-hop 4×4 with memory and multiplier banks on opposite columns.
+
+    Column 0 PEs are the only memory ports, column 3 PEs the only
+    multipliers, the middle columns plain ALUs. Even with the one-hop
+    links (distance-2 row/column hops) the two banks sit 3 apart, so *any*
+    load→mul or mul→store dependency is unmappable under direct adjacency —
+    the machine shape that needs route-through mapping
+    (``--max-route-hops``): one mov on a middle-column PE bridges the banks.
+    """
+    classes = tuple(
+        ("alu", "mem") if c == 0 else ("alu", "mul") if c == 3 else ("alu",)
+        for _r in range(4)
+        for c in range(4)
+    )
+    return ArchSpec(
+        name="onehop_split_4x4", rows=4, cols=4, topology="one-hop",
+        pe_classes=classes,
+    )
+
+
 PRESETS: dict[str, Callable[[], ArchSpec]] = {
     "paper_homogeneous_4x4": paper_homogeneous_4x4,
     "satmapit_edge_mem_4x4": satmapit_edge_mem_4x4,
     "mul_sparse_8x8": mul_sparse_8x8,
     "diagonal_20x20": diagonal_20x20,
+    "onehop_split_4x4": onehop_split_4x4,
 }
 
 

@@ -117,6 +117,27 @@ def _weighted_sample(rng: random.Random, pool: list[int], weights: list[float], 
     return chosen
 
 
+def route_stress_dfg() -> DFG:
+    """The route-through demo kernel: load → mul → store with an address chain.
+
+    On bank-split machines (``onehop_split_4x4``: memory ops pinned to column
+    0, multiplies to column 3) both the ``load→mul`` and ``mul→store`` edges
+    connect PEs that are never adjacent, so the kernel is unmappable under
+    direct adjacency at every II — and maps with one route-through mov per
+    bank crossing (``max_route_hops >= 1``). Used by the route-through tests,
+    the hetero benchmark's route row, and the CI escalation smoke.
+    """
+    from .dfg import Edge
+
+    return DFG(
+        num_nodes=5,
+        ops=["input", "load", "const", "mul", "store"],
+        edges=[Edge(0, 1), Edge(1, 3), Edge(2, 3), Edge(3, 4)],
+        imms=[0.0, 0.0, 3.0, 0.0, 0.0],
+        name="route_stress",
+    )
+
+
 def load_suite(names: list[str] | None = None) -> dict[str, DFG]:
     """Table III benchmarks, deterministically generated.
 

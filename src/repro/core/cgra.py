@@ -195,6 +195,41 @@ class CGRA:
             out.append(m)
         return tuple(out)
 
+    @cached_property
+    def _reach_cache(self) -> dict[int, tuple[int, ...]]:
+        return {1: self.closed_masks}
+
+    def reach_masks(self, hops: int) -> tuple[int, ...]:
+        """Closed ≤``hops``-step reachability masks (same §5 bit layout).
+
+        ``reach_masks(1)`` is exactly ``closed_masks``; ``reach_masks(h)[p]``
+        is every PE reachable from p by chaining at most ``h`` closed-adjacency
+        steps. This is the relaxed routability predicate of the route-through
+        space search (DESIGN.md §12): an edge placed at hop distance ``h > 1``
+        is later realised by splicing ``h - 1`` ``mov`` nodes onto the path.
+        """
+        if hops < 1:
+            raise ValueError(f"hops must be >= 1, got {hops}")
+        cache = self._reach_cache
+        if hops not in cache:
+            prev = self.reach_masks(hops - 1)
+            closed = self.closed_masks
+            out: list[int] = []
+            for pe in range(self.num_pes):
+                m, acc = prev[pe], prev[pe]
+                while m:
+                    b = m & -m
+                    acc |= closed[b.bit_length() - 1]
+                    m ^= b
+                out.append(acc)
+            cache[hops] = tuple(out)
+        return cache[hops]
+
+    def reach_degree(self, hops: int) -> int:
+        """Max closed ≤``hops``-step neighbourhood size: the D_M analogue the
+        time phase must use when route-through is allowed (DESIGN.md §12.3)."""
+        return max(m.bit_count() for m in self.reach_masks(hops))
+
     @property
     def connectivity_degree(self) -> int:
         """Paper's D_M: max closed neighbourhood size (self + mesh neighbours).
@@ -321,6 +356,28 @@ class CGRA:
             sort_keys=True,
             separators=(",", ":"),
         )
+        return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
+    def pressure_token(self, max_register_pressure: int | None):
+        """Cache-key component for the *effective* per-PE register bounds.
+
+        The mapper's ``max_register_pressure`` guarantee is per-PE:
+        ``min(max_register_pressure, registers_at(pe))`` for every PE. Two
+        grids of the same shape but different register sizing therefore admit
+        different mappings under the same scalar limit, so the scalar alone
+        must never key the mapping caches (the PR-4 bug this closes).
+        ``None`` when the guarantee is off (mappings are then
+        register-agnostic); the scalar bound when every PE's effective bound
+        collapses to one value; a digest of the full bound vector otherwise.
+        """
+        if max_register_pressure is None:
+            return None
+        bounds = tuple(
+            min(max_register_pressure, r) for r in self._registers_at
+        )
+        if len(set(bounds)) == 1:
+            return bounds[0]
+        payload = json.dumps(list(bounds), separators=(",", ":"))
         return hashlib.sha1(payload.encode()).hexdigest()[:16]
 
     def __str__(self) -> str:  # pragma: no cover

@@ -49,15 +49,31 @@ class Edge:
     distance == 0: intra-iteration data dependency.
     distance >= 1: loop-carried dependency (value produced `distance`
     iterations before it is consumed).
+
+    ``port`` pins the edge to an explicit operand slot of ``dst`` (0 = first
+    operand). -1 (the default) means "unpinned": the canonical operand order
+    is then ``(distance, src)``, which is what every frontend produces. The
+    route-through rewrite (:func:`splice_routes`) pins ports on the consumers
+    it touches so replacing a producer with a ``mov`` chain cannot reorder
+    the operands of a non-commutative op.
     """
 
     src: int
     dst: int
     distance: int = 0
+    port: int = -1
 
     def __post_init__(self) -> None:
         if self.distance < 0:
             raise ValueError(f"negative dependency distance on edge {self}")
+        if self.port < -1:
+            raise ValueError(f"invalid operand port on edge {self}")
+
+    def _operand_key(self) -> tuple:
+        # pinned ports order first among themselves; unpinned edges keep the
+        # historical (distance, src) order — a node's in-edges are either all
+        # pinned (route-through rewrite) or all unpinned (frontends)
+        return (0, self.port) if self.port >= 0 else (1, self.distance, self.src)
 
 
 @dataclass
@@ -123,6 +139,16 @@ class DFG:
             if e.src == v
             and (carried is None or (e.distance > 0) == carried)
         ]
+
+    def operands(self, v: int) -> list[Edge]:
+        """The canonical operand order of node ``v``.
+
+        Single source of truth shared by the scalar oracle
+        (``simulate._operands``) and the Pallas program builder
+        (``kernels/ops.py``): explicit ``Edge.port`` pins win, unpinned edges
+        fall back to the historical ``(distance, src)`` order.
+        """
+        return sorted(self.predecessors(v), key=Edge._operand_key)
 
     def undirected_adjacency(self) -> list[set[int]]:
         """Paper §IV-B: after scheduling, edge direction is dropped."""
@@ -233,7 +259,11 @@ class DFG:
                 "num_nodes": self.num_nodes,
                 "ops": self.ops,
                 "imms": self.imms,
-                "edges": [[e.src, e.dst, e.distance] for e in self.edges],
+                "edges": [
+                    [e.src, e.dst, e.distance] if e.port < 0
+                    else [e.src, e.dst, e.distance, e.port]
+                    for e in self.edges
+                ],
             },
             indent=2,
         )
@@ -260,6 +290,105 @@ class DFG:
     ) -> "DFG":
         es = [Edge(*((*e, 0)[:3])) for e in edges]
         return cls(num_nodes=num_nodes, edges=es, ops=list(ops or []), name=name)
+
+
+# ------------------------------------------------------- route-through rewrite
+
+@dataclass(frozen=True)
+class Route:
+    """Provenance of one route-through rewrite (DESIGN.md §12.2).
+
+    The original edge ``src -> dst`` (with its loop-carried ``distance``) was
+    replaced by the chain ``src -> movs[0] -> ... -> movs[-1] -> dst``; every
+    intermediate is a ``mov`` node appended to the rewritten DFG, and only the
+    final chain edge keeps the original distance. Mapping results carry these
+    so consumers can report placements of *original* nodes (ids below
+    ``Route.movs`` are unchanged by construction) and both cache layers can
+    reconstruct the rewritten DFG from ``(src, dst, distance, len(movs))``.
+    """
+
+    src: int
+    dst: int
+    distance: int
+    movs: tuple[int, ...]
+
+    def spec(self) -> tuple[int, int, int, int]:
+        """The compact JSON-able form both mapping caches store."""
+        return (self.src, self.dst, self.distance, len(self.movs))
+
+
+def splice_routes(
+    dfg: DFG, specs: Sequence[tuple[int, int, int, int]]
+) -> tuple[DFG, list[Route]]:
+    """Rewrite ``dfg`` by splicing ``mov`` chains onto the given edges.
+
+    ``specs`` is a sequence of ``(src, dst, distance, n_movs)`` — one per
+    rewritten edge, each matching a distinct existing edge (duplicated edges
+    are consumed first-to-last). Mov node ids are allocated contiguously from
+    ``dfg.num_nodes`` in spec order, so original node ids (and therefore
+    input/store identities) are preserved. Operand order of every touched
+    consumer is pinned via explicit edge ports *before* the rewrite, so the
+    rewritten DFG computes exactly what the original does (the movs are
+    identity ops) — including non-commutative consumers.
+
+    Returns ``(routed_dfg, routes)``; raises ValueError when a spec matches
+    no remaining edge or asks for zero movs.
+    """
+    edges = list(dfg.edges)
+    consumed: set[int] = set()
+    ops = list(dfg.ops)
+    imms = list(dfg.imms)
+    routes: list[Route] = []
+    next_id = dfg.num_nodes
+
+    # pin operand order on every dst a rewrite touches (ports reflect the
+    # original canonical order, so untouched consumers keep their semantics)
+    touched = {dst for (_s, dst, _d, _n) in specs}
+    port_of: dict[int, int] = {}        # edge index -> pinned port
+    for v in touched:
+        idxs = [i for i, e in enumerate(edges) if e.dst == v]
+        idxs.sort(key=lambda i: edges[i]._operand_key())
+        for slot, i in enumerate(idxs):
+            port_of[i] = slot
+    for i, slot in port_of.items():
+        e = edges[i]
+        edges[i] = Edge(e.src, e.dst, e.distance, port=slot)
+
+    new_edges: list[Edge] = []
+    for src, dst, distance, n_movs in specs:
+        if n_movs < 1:
+            raise ValueError(f"route on edge ({src},{dst},{distance}) has no movs")
+        idx = next(
+            (i for i, e in enumerate(edges)
+             if i not in consumed
+             and (e.src, e.dst, e.distance) == (src, dst, distance)),
+            None,
+        )
+        if idx is None:
+            raise ValueError(
+                f"no unrouted edge ({src},{dst},{distance}) in {dfg.name!r}"
+            )
+        consumed.add(idx)
+        movs = tuple(range(next_id, next_id + n_movs))
+        next_id += n_movs
+        ops.extend("mov" for _ in movs)
+        imms.extend(0.0 for _ in movs)
+        prev = src
+        for m in movs:
+            new_edges.append(Edge(prev, m, 0))
+            prev = m
+        # the final hop keeps the original distance and the pinned port
+        edges[idx] = Edge(prev, dst, distance, port=edges[idx].port)
+        routes.append(Route(src=src, dst=dst, distance=distance, movs=movs))
+
+    routed = DFG(
+        num_nodes=next_id,
+        edges=edges + new_edges,
+        ops=ops,
+        imms=imms,
+        name=dfg.name,
+    )
+    return routed, routes
 
 
 def running_example() -> DFG:

@@ -41,8 +41,8 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from .cgra import CGRA
-from .dfg import DFG
-from .mono import SpaceStats, check_monomorphism, find_monomorphism
+from .dfg import DFG, Route, splice_routes
+from .mono import SpaceStats, check_monomorphism, check_routes, find_monomorphism
 from .schedule import min_ii, rec_ii, res_ii
 from .time_backends import resolve_backend_name
 from .time_smt import TimeSolution, TimeSolver, check_time_solution
@@ -50,13 +50,22 @@ from .time_smt import TimeSolution, TimeSolver, check_time_solution
 
 @dataclass
 class Mapping:
-    """A complete space-time mapping of a DFG onto a CGRA."""
+    """A complete space-time mapping of a DFG onto a CGRA.
+
+    When the space engine had to route edges through intermediate PEs
+    (``max_route_hops > 0``, DESIGN.md §12), ``dfg`` is the *rewritten* graph
+    — original node ids unchanged, one appended ``mov`` node per hop — and
+    ``routes`` carries the provenance, so consumers can still report
+    placements of the original kernel (``original_nodes`` /
+    ``original_placement``). A direct mapping has ``routes == []``.
+    """
 
     dfg: DFG
     cgra: CGRA
     ii: int
     t_abs: list[int]                 # absolute schedule time per node
     placement: list[int]             # PE per node
+    routes: list[Route] = field(default_factory=list)  # route-through provenance
 
     @property
     def labels(self) -> list[int]:
@@ -74,6 +83,25 @@ class Mapping:
     def num_stages(self) -> int:
         """Pipeline depth: number of interleaved iterations in steady state."""
         return -(-self.schedule_length // self.ii)
+
+    @property
+    def num_route_movs(self) -> int:
+        """Route-through movs appended to the DFG (0 for direct mappings)."""
+        return sum(len(r.movs) for r in self.routes)
+
+    @property
+    def original_nodes(self) -> range:
+        """Node ids of the pre-rewrite kernel (splicing appends, never renames)."""
+        return range(self.dfg.num_nodes - self.num_route_movs)
+
+    def original_placement(self) -> list[int]:
+        """Placement restricted to the original kernel's nodes."""
+        return list(self.placement[: len(self.original_nodes)])
+
+    def routes_spec(self) -> tuple[tuple[int, int, int, int], ...]:
+        """Compact ``(src, dst, distance, n_movs)`` rows — what both mapping
+        caches persist; ``dfg.splice_routes`` rebuilds the rewritten DFG."""
+        return tuple(r.spec() for r in self.routes)
 
     def kernel_table(self) -> list[list[tuple[int, int]]]:
         """Per kernel step: [(pe, node)] executing at that step."""
@@ -106,6 +134,11 @@ class Mapping:
         errs += check_monomorphism(
             self.dfg, self.cgra, self.labels, self.placement, self.ii
         )
+        if self.routes:
+            errs += check_routes(
+                self.dfg, self.cgra, self.t_abs, self.placement, self.ii,
+                self.routes,
+            )
         if registers and not errs:
             # simulate imports this module for Mapping: import lazily
             from .simulate import register_pressure_by_pe
@@ -165,9 +198,11 @@ class MapResult:
 
 # --------------------------------------------------------------- LRU cache
 
-# (dfg_hash, rows, cols, topology, connectivity, max_rp, arch_token, ii)
-#   -> (t_abs, placement)
-_MAP_CACHE: OrderedDict[tuple, tuple[list[int], list[int]]] = OrderedDict()
+# (dfg_hash, rows, cols, topology, connectivity, max_rp, arch_token,
+#  pressure_token, max_route_hops, ii) -> (t_abs, placement, routes_spec)
+_MAP_CACHE: OrderedDict[
+    tuple, tuple[list[int], list[int], tuple]
+] = OrderedDict()
 _MAP_CACHE_MAX = 128
 
 
@@ -175,32 +210,81 @@ def clear_mapping_cache() -> None:
     _MAP_CACHE.clear()
 
 
-def _cache_base_key(dfg, cgra, connectivity, max_rp) -> tuple:
+def _cache_base_key(dfg, cgra, connectivity, max_rp, max_route_hops=0) -> tuple:
     # arch_token is None on the paper's homogeneous grid and a digest of the
     # capability layout otherwise (DESIGN.md §10) — heterogeneous mappings of
-    # the same DFG must never alias homogeneous ones in either cache layer
+    # the same DFG must never alias homogeneous ones in either cache layer.
+    # pressure_token keys the *effective per-PE* register bounds the mapper
+    # guarantees under max_rp (scalar-only keying served oversubscribing
+    # mappings across register sizings), and max_route_hops keys the route-
+    # through allowance — a hops=2 mapping carries movs a hops=0 caller must
+    # never be served.
     return (
         dfg.stable_hash(), cgra.rows, cgra.cols, cgra.topology,
         connectivity, max_rp, cgra.arch_token(),
+        cgra.pressure_token(max_rp), max_route_hops,
     )
+
+
+def _rebuild_mapping(
+    dfg: DFG, cgra: CGRA, ii: int, t_abs: list[int], placement: list[int],
+    routes_spec,
+) -> Mapping:
+    """Reconstruct a (possibly routed) Mapping from cached arrays.
+
+    Raises ValueError when ``routes_spec`` does not splice onto ``dfg`` —
+    disk-cache callers treat that as a corrupt entry.
+    """
+    if routes_spec:
+        routed, routes = splice_routes(dfg, [tuple(s) for s in routes_spec])
+        return Mapping(dfg=routed, cgra=cgra, ii=ii, t_abs=t_abs,
+                       placement=placement, routes=routes)
+    return Mapping(dfg=dfg, cgra=cgra, ii=ii, t_abs=t_abs, placement=placement)
 
 
 def _cache_put(base_key: tuple, mapping: Mapping) -> None:
     key = (*base_key, mapping.ii)
-    _MAP_CACHE[key] = (list(mapping.t_abs), list(mapping.placement))
+    _MAP_CACHE[key] = (
+        list(mapping.t_abs), list(mapping.placement), mapping.routes_spec()
+    )
     _MAP_CACHE.move_to_end(key)
     while len(_MAP_CACHE) > _MAP_CACHE_MAX:
         _MAP_CACHE.popitem(last=False)
 
 
-def _cache_get(base_key: tuple, lo_ii: int, hi_ii: int) -> tuple[int, list[int], list[int]] | None:
+def _cache_get(
+    base_key: tuple, lo_ii: int, hi_ii: int
+) -> tuple[int, list[int], list[int], tuple] | None:
     for ii in range(lo_ii, hi_ii + 1):
         key = (*base_key, ii)
         hit = _MAP_CACHE.get(key)
         if hit is not None:
             _MAP_CACHE.move_to_end(key)
-            return ii, list(hit[0]), list(hit[1])
+            return ii, list(hit[0]), list(hit[1]), hit[2]
     return None
+
+
+def _cache_drop(base_key: tuple, ii: int) -> None:
+    _MAP_CACHE.pop((*base_key, ii), None)
+
+
+def _pressure_offenders(mapping: Mapping, max_rp: int) -> list[int]:
+    """PEs whose steady-state pressure exceeds their *effective* bound.
+
+    The effective bound is per-PE — ``min(max_rp, cgra.registers_at(pe))`` —
+    so a scalar budget sized for the largest register file (e.g. a 16-entry
+    mem-PE file) can no longer wave through a mapping that oversubscribes a
+    smaller per-class file on another PE (the PR-4 scalar-fold bug).
+    """
+    # simulate imports this module for Mapping: import lazily
+    from .simulate import register_pressure_by_pe
+
+    cgra = mapping.cgra
+    return [
+        pe
+        for pe, p in sorted(register_pressure_by_pe(mapping).items())
+        if p > min(max_rp, cgra.registers_at(pe))
+    ]
 
 
 # ---------------------------------------------------------------- portfolio
@@ -293,6 +377,7 @@ def _map_dfg_impl(
     max_retries_per_window: int = 8,
     window_timeout_s: float = 10.0,
     max_register_pressure: int | None = None,
+    max_route_hops: int = 0,
     deterministic: bool = False,
     use_cache: bool = True,
     cache_dir: str | None = None,
@@ -323,9 +408,20 @@ def _map_dfg_impl(
 
     * ``max_register_pressure`` enables register-file-aware mapping — the
       restriction the paper's §V-3 leaves to future work: mappings whose
-      steady-state per-PE live-value count exceeds the budget are rejected and
-      the search continues, so accepted mappings are guaranteed to fit the
-      register files.
+      steady-state live-value count on any PE exceeds that PE's *effective*
+      bound — ``min(max_register_pressure, cgra.registers_at(pe))`` — are
+      rejected and the search continues, so accepted mappings are guaranteed
+      to fit even per-class-sized register files (DESIGN.md §10.7). The
+      offending PEs' schedules are re-realized (lifetime-compacted) before
+      rejecting.
+    * ``max_route_hops`` allows route-through mapping (DESIGN.md §12): when a
+      label partition admits no direct embedding, the space engine may place
+      G-adjacent ops up to ``1 + max_route_hops`` closed-adjacency steps
+      apart and splice ``mov`` nodes (each occupying a real (PE, step) slot)
+      onto the connecting path. Escalation is direct-first per partition:
+      hops 0, then 1, ... then ``max_route_hops``, so direct embeddings are
+      always preferred. 0 (the default) is the paper's direct-only behaviour,
+      bit-identical to previous releases.
     * ``deterministic=True`` swaps every wall-clock limit for node/step
       budgets so results are load-independent and reproducible;
       ``time_budget_s`` / ``space_timeout_s`` / ``window_timeout_s`` are then
@@ -349,6 +445,8 @@ def _map_dfg_impl(
         raise ValueError(
             f"invalid window striping: offset {window_offset}, stride {window_stride}"
         )
+    if max_route_hops < 0:
+        raise ValueError(f"max_route_hops must be >= 0, got {max_route_hops}")
     if deterministic:
         # the bounded/reproducible contract only holds on the cp backend (z3
         # cannot honor step budgets), and only when process history cannot
@@ -388,21 +486,32 @@ def _map_dfg_impl(
     deadline = None if deterministic else start + time_budget_s
     hi = max_ii if max_ii is not None else default_max_ii(stats.m_ii)
 
+    def pressure_reject(mapping: Mapping) -> bool:
+        """Cache-served mappings must honor the same per-PE guarantee as
+        freshly solved ones — a stale/poisoned entry that oversubscribes any
+        PE's effective bound is rejected, never returned."""
+        if max_register_pressure is None:
+            return False
+        return bool(_pressure_offenders(mapping, max_register_pressure))
+
     base_key = None
     disk = None
     if use_cache:
-        base_key = _cache_base_key(dfg, cgra, connectivity, max_register_pressure)
+        base_key = _cache_base_key(
+            dfg, cgra, connectivity, max_register_pressure, max_route_hops
+        )
         hit = _cache_get(base_key, stats.m_ii, hi)
         if hit is not None:
-            ii, t_abs, placement = hit
-            mapping = Mapping(dfg=dfg, cgra=cgra, ii=ii, t_abs=t_abs,
-                              placement=placement)
-            if not timed_validate(mapping):
+            ii, t_abs, placement, routes_spec = hit
+            mapping = _rebuild_mapping(dfg, cgra, ii, t_abs, placement,
+                                       routes_spec)
+            if not timed_validate(mapping) and not pressure_reject(mapping):
                 stats.cache_hit = True
                 stats.final_ii = ii
                 stats.backend = "cache"
                 stats.total_s = _time.perf_counter() - start
                 return MapResult(mapping, stats)
+            _cache_drop(base_key, ii)   # invalid/oversubscribed: never serve
         # memory missed: consult the persistent layer (DESIGN.md §9).
         # Function-local import by design: service/batch.py imports this
         # module at top level, so a module-level import here would close an
@@ -417,10 +526,16 @@ def _map_dfg_impl(
                 dhit = disk.get(base_key, lo, hi)
                 if dhit is None:
                     break
-                ii, t_abs, placement = dhit
-                mapping = Mapping(dfg=dfg, cgra=cgra, ii=ii, t_abs=t_abs,
-                                  placement=placement)
-                if timed_validate(mapping):
+                ii, t_abs, placement, routes_spec = dhit
+                try:
+                    mapping = _rebuild_mapping(dfg, cgra, ii, t_abs,
+                                               placement, routes_spec)
+                    invalid = bool(timed_validate(mapping)) or pressure_reject(
+                        mapping
+                    )
+                except (ValueError, IndexError):
+                    invalid = True      # routes don't splice onto this DFG
+                if invalid:
                     # schema-valid but semantically invalid: drop it so it
                     # cannot poison every future cold lookup, try higher IIs
                     disk.invalidate(base_key, ii)
@@ -466,7 +581,8 @@ def _map_dfg_impl(
             if use_cache:
                 _cache_put(base_key, mapping)
                 if disk is not None:
-                    disk.put(base_key, mapping.ii, mapping.t_abs, mapping.placement)
+                    disk.put(base_key, mapping.ii, mapping.t_abs,
+                             mapping.placement, routes=mapping.routes_spec())
         return MapResult(mapping, stats, reason=reason)
 
     def try_space(
@@ -480,40 +596,89 @@ def _map_dfg_impl(
             timeout = max(2.5, space_timeout_s)
         else:
             timeout = space_timeout_s * (1 + rnd)
-        space = find_monomorphism(
-            dfg, cgra, sol.labels, w.ii,
-            timeout_s=timeout,
-            node_budget=node_budget,
-            restarts=restarts,
-            seed=seed * 8191 + rnd * 127 + w.slack * 17 + salt,
-            stats=sstats,
-        )
+        space = None
+        # escalation order (DESIGN.md §12.4): direct first, then one more
+        # allowed hop per level — route-throughs are only spent when no
+        # tighter embedding of this partition is found. hops == 0 takes the
+        # exact historical call, keeping the direct path bit-identical; with
+        # routing enabled the per-call wall cap is split across the levels so
+        # a partition can never spend more than the historical cap in total.
+        if timeout is not None and max_route_hops:
+            timeout /= max_route_hops + 1
+        for hops in range(max_route_hops + 1):
+            space = find_monomorphism(
+                dfg, cgra, sol.labels, w.ii,
+                timeout_s=timeout,
+                node_budget=node_budget,
+                restarts=restarts,
+                seed=seed * 8191 + rnd * 127 + w.slack * 17 + salt,
+                stats=sstats,
+                **(
+                    {} if hops == 0
+                    else {"t_abs": sol.t_abs, "max_route_hops": hops}
+                ),
+            )
+            if space is not None:
+                break
         stats.space_phase_s += sstats.search_time_s
         stats.space_nodes_visited += sstats.nodes_visited
         if space is None:
             stats.mono_failures += 1
             return None
-        mapping = Mapping(
-            dfg=dfg, cgra=cgra, ii=w.ii,
-            t_abs=sol.t_abs, placement=space.placement,
-        )
+        if space.routes:
+            # splice the materialised movs into the DFG (provenance-keeping
+            # rewrite: original node ids unchanged, movs appended in route
+            # order — exactly the order the extended arrays are built in)
+            routed_dfg, routes = splice_routes(
+                dfg,
+                [(r.edge[0], r.edge[1], r.edge[2], len(r.path))
+                 for r in space.routes],
+            )
+            mapping = Mapping(
+                dfg=routed_dfg, cgra=cgra, ii=w.ii,
+                t_abs=list(sol.t_abs) + [t for r in space.routes
+                                         for t in r.times],
+                placement=list(space.placement) + [pe for r in space.routes
+                                                   for pe in r.path],
+                routes=routes,
+            )
+        else:
+            mapping = Mapping(
+                dfg=dfg, cgra=cgra, ii=w.ii,
+                t_abs=sol.t_abs, placement=space.placement,
+            )
         if max_register_pressure is not None:
-            from .simulate import check_register_pressure
-
-            if check_register_pressure(mapping) > max_register_pressure:
-                # paper §V-3 extension: before rejecting, re-realize the same
-                # partition with compacted lifetimes (same labels => the found
-                # placement stays valid) — usually enough to fit the budget
-                compact = w.solver.realize_compact(sol)
+            offenders = _pressure_offenders(mapping, max_register_pressure)
+            if offenders and not mapping.routes:
+                # paper §V-3 extension: before rejecting, re-realize the
+                # *offending PEs'* schedules with compacted lifetimes (same
+                # labels => the found placement stays valid) — usually enough
+                # to fit their files without disturbing the rest
+                off_nodes = [
+                    v for v in dfg.nodes if space.placement[v] in set(offenders)
+                ]
+                compact = w.solver.realize_compact(sol, nodes=off_nodes)
                 mapping = Mapping(
                     dfg=dfg, cgra=cgra, ii=w.ii,
                     t_abs=compact.t_abs, placement=space.placement,
                 )
-                if check_register_pressure(mapping) > max_register_pressure:
-                    # a different placement of the same partition may still
-                    # fit: the solution stays pending rather than blocked
-                    stats.mono_failures += 1
-                    return None
+                offenders = _pressure_offenders(mapping, max_register_pressure)
+                if offenders:
+                    # partial push wasn't enough: compact every lifetime
+                    compact = w.solver.realize_compact(sol)
+                    mapping = Mapping(
+                        dfg=dfg, cgra=cgra, ii=w.ii,
+                        t_abs=compact.t_abs, placement=space.placement,
+                    )
+                    offenders = _pressure_offenders(
+                        mapping, max_register_pressure
+                    )
+            if offenders:
+                # routed mappings skip re-realization (mov times are pinned
+                # inside the original gaps); a different placement of the
+                # same partition may still fit — pending, not blocked
+                stats.mono_failures += 1
+                return None
         return mapping
 
     polish_deadline: float | None = None
@@ -576,14 +741,20 @@ def _map_dfg_impl(
             # Deeper-slack windows mostly re-enumerate equivalent partitions —
             # only open slack s+1 once every shallower window of this II is
             # exhausted without ever yielding a time solution (matches the
-            # old sweep's II-escalation behaviour).
+            # old sweep's II-escalation behaviour). Under route-through the
+            # extra slack is exactly where the mov firing slots come from
+            # (each hop consumes one cycle of an edge's time gap), so there
+            # the gate ignores yielded_any: deeper slack opens as soon as the
+            # shallower windows are exhausted, even when their (unroutable)
+            # partitions kept the old gate shut.
             if w.slack > 0:
                 shallower = [
                     x for x in windows if x.ii == w.ii and x.slack < w.slack
                 ]
                 if any(
                     not x.infeasible
-                    and (x.yielded_any or x.solver is None or not x.solver.exhausted)
+                    and ((max_route_hops == 0 and x.yielded_any)
+                         or x.solver is None or not x.solver.exhausted)
                     for x in shallower
                 ):
                     continue
@@ -594,6 +765,7 @@ def _map_dfg_impl(
                         extra_slack=w.slack,
                         connectivity=connectivity,
                         backend=backend,
+                        route_hops=max_route_hops,
                         timeout_s=None,
                         # seed 0 keeps the CP value order greedy (earliest-
                         # first), so each window's FIRST partition matches the

@@ -114,9 +114,12 @@ class JobReport:
     windows_opened: int = 0
     time_solutions_tried: int = 0
     space_nodes_visited: int = 0
-    # the mapping itself (success only); excluded from as_dict row payloads
+    # the mapping itself (success only); excluded from as_dict row payloads.
+    # ``routes`` is the route-through spec (src, dst, distance, n_movs) rows
+    # needed to rebuild the rewritten DFG caller-side (DESIGN.md §12.2).
     t_abs: list[int] | None = None
     placement: list[int] | None = None
+    routes: list[list[int]] | None = None
 
     @property
     def solved(self) -> bool:
@@ -195,6 +198,7 @@ def _job_report(job: CompileJob, res: MapResult, wall_s: float) -> JobReport:
         space_nodes_visited=res.stats.space_nodes_visited,
         t_abs=list(res.mapping.t_abs) if res.ok else None,
         placement=list(res.mapping.placement) if res.ok else None,
+        routes=[list(r) for r in res.mapping.routes_spec()] if res.ok else None,
     )
 
 

@@ -35,7 +35,11 @@ from dataclasses import dataclass, field
 # entries then simply stop matching (their digests embed the old version).
 # v2: base key grew an arch token (heterogeneous architecture digest,
 # DESIGN.md §10) — None on the paper's homogeneous grids.
-CACHE_VERSION = 2
+# v3: base key grew the effective per-PE register-pressure token and the
+# route-through hop allowance, and the payload grew a ``routes`` list
+# (DESIGN.md §12) — pre-fix entries keyed on the scalar pressure limit alone
+# could oversubscribe per-class register files and must never be served.
+CACHE_VERSION = 3
 
 _ENTRY_SUFFIX = ".json"
 
@@ -87,14 +91,21 @@ class DiskMappingCache:
         connectivity: str,
         max_register_pressure: int | None,
         arch_token: str | None = None,
+        pressure_token=None,
+        max_route_hops: int = 0,
     ) -> tuple:
         """Canonical base key; mirrors the in-memory LRU's ``_cache_base_key``.
 
         ``arch_token`` is ``CGRA.arch_token()``: None for the homogeneous
         paper machine, a digest of the capability layout otherwise.
+        ``pressure_token`` is ``CGRA.pressure_token(max_register_pressure)``
+        — the *effective per-PE* register-bound vector the mapper guarantees
+        (None when the guarantee is off); ``max_route_hops`` keys the
+        route-through allowance the mapping was searched under.
         """
         return (dfg_hash, rows, cols, topology, connectivity,
-                max_register_pressure, arch_token)
+                max_register_pressure, arch_token, pressure_token,
+                max_route_hops)
 
     def _digest(self, base_key: tuple, ii: int) -> str:
         payload = json.dumps(
@@ -111,22 +122,26 @@ class DiskMappingCache:
     # ------------------------------------------------------------------- get
     def get(
         self, base_key: tuple, lo_ii: int, hi_ii: int
-    ) -> tuple[int, list[int], list[int]] | None:
+    ) -> tuple[int, list[int], list[int], list[tuple]] | None:
         """Best (lowest-II) entry for ``base_key`` with II in [lo_ii, hi_ii].
 
-        Returns ``(ii, t_abs, placement)`` or None. Scans IIs ascending so a
-        hit is always the best cached answer, matching the portfolio mapper's
-        smallest-II-first preference.
+        Returns ``(ii, t_abs, placement, routes)`` or None — ``routes`` is
+        the ``(src, dst, distance, n_movs)`` route-through spec list (empty
+        for direct mappings; ``dfg.splice_routes`` rebuilds the rewritten
+        DFG). Scans IIs ascending so a hit is always the best cached answer,
+        matching the portfolio mapper's smallest-II-first preference.
         """
         for ii in range(lo_ii, hi_ii + 1):
             entry = self._read(base_key, ii)
             if entry is not None:
                 self.stats.hits += 1
-                return ii, entry[0], entry[1]
+                return ii, entry[0], entry[1], entry[2]
         self.stats.misses += 1
         return None
 
-    def _read(self, base_key: tuple, ii: int) -> tuple[list[int], list[int]] | None:
+    def _read(
+        self, base_key: tuple, ii: int
+    ) -> tuple[list[int], list[int], list[tuple]] | None:
         path = self._path(base_key, ii)
         try:
             with open(path, "r", encoding="utf-8") as f:
@@ -147,10 +162,16 @@ class DiskMappingCache:
             placement = [int(p) for p in payload["placement"]]
             if len(t_abs) != len(placement) or not t_abs:
                 raise ValueError("length mismatch")
+            routes = [
+                (int(s), int(d), int(dist), int(n))
+                for s, d, dist, n in payload.get("routes", [])
+            ]
+            if sum(n for *_rest, n in routes) >= len(t_abs):
+                raise ValueError("routes longer than the mapping")
         except (KeyError, TypeError, ValueError):
             self._drop(path)
             return None
-        return t_abs, placement
+        return t_abs, placement, routes
 
     def _drop(self, path: str) -> None:
         self.stats.corrupt_dropped += 1
@@ -170,9 +191,14 @@ class DiskMappingCache:
 
     # ------------------------------------------------------------------- put
     def put(
-        self, base_key: tuple, ii: int, t_abs: list[int], placement: list[int]
+        self, base_key: tuple, ii: int, t_abs: list[int], placement: list[int],
+        *, routes=(),
     ) -> None:
-        """Atomically persist one mapping (idempotent across processes)."""
+        """Atomically persist one mapping (idempotent across processes).
+
+        ``routes`` is the route-through spec (``Mapping.routes_spec()``);
+        omit/empty for direct mappings.
+        """
         path = self._path(base_key, ii)
         payload = {
             "version": CACHE_VERSION,
@@ -180,6 +206,7 @@ class DiskMappingCache:
             "ii": ii,
             "t_abs": list(t_abs),
             "placement": list(placement),
+            "routes": [list(r) for r in routes],
         }
         tmp = f"{path}.tmp.{os.getpid()}"
         try:

@@ -86,8 +86,9 @@ def alu(op: str, a: float, b: float, imm: float) -> float:
 
 
 def _operands(dfg: DFG, v: int) -> list:
-    """Deterministic operand order: intra edges first, then carried, by src."""
-    return sorted(dfg.predecessors(v), key=lambda e: (e.distance, e.src))
+    """Deterministic operand order: ``DFG.operands`` (port pins, then
+    intra edges first, then carried, by src). Shared with kernels/ops.py."""
+    return dfg.operands(v)
 
 
 def interpret_dfg(
@@ -256,7 +257,7 @@ def check_equivalence(
 
 
 def register_pressure_by_pe(
-    mapping: Mapping, *, num_iters: int = 8
+    mapping: Mapping, *, num_iters: int | None = None
 ) -> dict[int, int]:
     """Max simultaneous live values per PE (only PEs with pressure > 0).
 
@@ -264,7 +265,14 @@ def register_pressure_by_pe(
     (``CGRA.registers_at`` / ``ArchSpec.registers_by_class``):
     ``Mapping.validate`` compares each PE's pressure against that PE's own
     bound instead of one grid-wide scalar.
+
+    ``num_iters=None`` (the default) probes ``num_stages + 2`` iterations (at
+    least 8): a value can stay live for up to ``num_stages`` interleaved
+    iterations, so a fixed shallow probe under-reports the steady state of
+    deep pipelines — exactly the regime where register files overflow.
     """
+    if num_iters is None:
+        num_iters = max(8, mapping.num_stages + 2)
     inputs = {
         v: [1.0] * num_iters
         for v in mapping.dfg.nodes
@@ -274,7 +282,9 @@ def register_pressure_by_pe(
     return rep.max_register_pressure
 
 
-def check_register_pressure(mapping: Mapping, *, num_iters: int = 8) -> int:
+def check_register_pressure(
+    mapping: Mapping, *, num_iters: int | None = None
+) -> int:
     """Max simultaneous live values on any PE (paper assumes this fits)."""
     by_pe = register_pressure_by_pe(mapping, num_iters=num_iters)
     return max(by_pe.values(), default=0)

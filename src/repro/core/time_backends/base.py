@@ -27,7 +27,11 @@ class TimeProblem:
     asap: tuple[int, ...]                     # modulo-aware window low
     alap: tuple[int, ...]                     # modulo-aware window high
     cap: int                                  # PEs: capacity per kernel step
-    d_m: int                                  # connectivity degree D_M
+    # connectivity degree: D_M on a direct-only search; the relaxed closed
+    # ≤(1+route_hops)-step reach degree when the mapper allows route-through
+    # (TimeSolver(route_hops=...), DESIGN.md §12.3) — the paper's D_M bound
+    # is not a necessary condition once edges may ride mov chains.
+    d_m: int
     strict: bool                              # strict connectivity mode
     seed: int = 0
     # per-op-class capacities (DESIGN.md §10): (class name, per-step capacity,
@@ -116,6 +120,23 @@ def residue_window(lo: int, hi: int, k: int, ii: int) -> tuple[int, int] | None:
     if first > hi:
         return None
     return first, first + ((hi - first) // ii) * ii
+
+
+def mov_slot_headroom(labels, ii: int, cap: int) -> list[int]:
+    """Free-slot count per kernel step for a realized label assignment.
+
+    The slot/cardinality accounting shared by the route-through materializer
+    (core/mono.py) when it re-labels a partition by inserting ``mov`` nodes:
+    a mov occupies a real (PE, step) slot, so a step may only absorb one when
+    its load is below ``cap`` (the per-step capacity both backends enforce
+    for the original nodes). Per-class caps need no extra row here — a mov is
+    ``alu`` work placed on a concrete capable free PE, and distinct-PE
+    occupancy is a witness that every cardinality constraint still holds.
+    """
+    load = [0] * ii
+    for k in labels:
+        load[k % ii] += 1
+    return [cap - c for c in load]
 
 
 def triangles(adj) -> list[tuple[int, int, int]]:

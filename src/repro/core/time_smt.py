@@ -124,9 +124,21 @@ class TimeSolver:
         backend: str = "auto",
         timeout_s: float | None = None,
         seed: int = 0,
+        route_hops: int = 0,
     ) -> None:
+        """``route_hops > 0`` relaxes the connectivity constraint family to
+        the route-through regime (DESIGN.md §12.3): with up to ``route_hops``
+        mov insertions per edge, a neighbour only needs to sit within the
+        closed ``1 + route_hops``-step reach of a PE, so D_M is replaced by
+        ``cgra.reach_degree(1 + route_hops)`` in the prechecks and backend
+        constraints, and the strict-mode triangle exclusion is dropped (three
+        mutually adjacent nodes *can* share a step once edges may ride mov
+        chains). ``route_hops=0`` is bit-identical to the historical solver.
+        """
         if connectivity not in ("paper", "strict"):
             raise ValueError(connectivity)
+        if route_hops < 0:
+            raise ValueError(f"route_hops must be >= 0, got {route_hops}")
         self.dfg = dfg
         self.cgra = cgra
         self.ii = ii
@@ -146,7 +158,8 @@ class TimeSolver:
         #  (b) window-aware: neighbours can only occupy kernel steps their
         #      [asap, alap] windows reach; per-step supply is capped at D_M
         #      (D_M - 1 at v's own step when v's window is a singleton).
-        d_m = cgra.connectivity_degree
+        d_m = (cgra.connectivity_degree if route_hops == 0
+               else cgra.reach_degree(1 + route_hops))
         for v, nbrs in enumerate(dfg.undirected_adjacency()):
             if not nbrs:
                 continue
@@ -204,7 +217,7 @@ class TimeSolver:
             strict=connectivity == "strict",
             seed=seed,
             class_caps=tuple(class_caps),
-            triangle_free=cgra.triangle_free,
+            triangle_free=cgra.triangle_free and route_hops == 0,
         )
         self.backend = resolve_backend_name(backend)
         self._engine = create_backend(self.backend, problem, timeout_s=timeout_s)
@@ -219,7 +232,9 @@ class TimeSolver:
         self._engine.block(labels)
         self.stats.blocked += 1
 
-    def realize_compact(self, sol: TimeSolution) -> TimeSolution:
+    def realize_compact(
+        self, sol: TimeSolution, *, nodes=None
+    ) -> TimeSolution:
         """Lifetime-compacting re-realization of ``sol``'s label partition.
 
         Backends return the *minimal* schedule for a partition (every node as
@@ -230,18 +245,24 @@ class TimeSolver:
         constraints, floor-rounded to each node's residue class) — same
         labels, same validity, shorter lifetimes. Used by the mapper's
         register-pressure-constrained retries (paper §V-3 extension).
+
+        ``nodes`` restricts the push to a subset (the mapper passes the nodes
+        placed on register-oversubscribed PEs so only the offending PEs'
+        schedules move); everything else keeps its time from ``sol``, which
+        stays valid because the fixpoint is pointwise >= ``sol``.
         """
         ii = self.ii
         labels = sol.labels
         n = self.dfg.num_nodes
+        movable = set(range(n)) if nodes is None else set(nodes)
         has_succ = [False] * n
         for e in self.dfg.edges:
             if e.src != e.dst:
                 has_succ[e.src] = True
         ub: list[int] = []
         for v in range(n):
-            if not has_succ[v]:
-                ub.append(sol.t_abs[v])     # sinks stay put
+            if not has_succ[v] or v not in movable:
+                ub.append(sol.t_abs[v])     # sinks (and unselected nodes) stay
                 continue
             win = residue_window(self.asap[v], self.alap[v], labels[v], ii)
             assert win is not None          # sol.t_abs[v] inhabits the class

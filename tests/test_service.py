@@ -130,7 +130,7 @@ def test_disk_cache_stats_counters(tmp_path):
     assert store.stats.misses == 1
     store.put(key, 2, [0, 1], [0, 1])
     assert store.stats.writes == 1
-    assert store.get(key, 1, 3) == (2, [0, 1], [0, 1])
+    assert store.get(key, 1, 3) == (2, [0, 1], [0, 1], [])
     assert store.stats.hits == 1
 
 
