@@ -5,6 +5,8 @@
   kernels  — Pallas kernel micro-benchmarks
   hetero   — the suite on a heterogeneous arch preset (--arch), with
              execute_mapping capability verification (DESIGN.md §10)
+  scale    — one kernel at 4x4..100x100 per space backend (exact vs
+             anneal), execution-verified, with utilization (DESIGN.md §13)
 
 Each section also emits a ``BENCH_<name>.json`` artifact (consumed by CI and
 by the Fig. 5 near-flat acceptance gate) and prints a
@@ -39,7 +41,8 @@ def main(argv=None) -> None:
         help="CI job: quick subset, no joint baseline, JSON artifacts only",
     )
     ap.add_argument("--skip-joint", action="store_true")
-    ap.add_argument("--only", choices=["table3", "fig5", "kernels", "hetero"])
+    ap.add_argument("--only",
+                    choices=["table3", "fig5", "kernels", "hetero", "scale"])
     add_cli_args(ap)          # --jobs/--cache-dir/--profile/--arch/... (api)
     args = ap.parse_args(argv)
     if args.smoke:
@@ -50,7 +53,13 @@ def main(argv=None) -> None:
     # --arch flag is unset; table3/fig5 build their own homogeneous grids
     hetero_arch = options.arch or "satmapit_edge_mem_4x4"
 
-    from benchmarks import bench_fig5, bench_hetero, bench_kernels, bench_table3
+    from benchmarks import (
+        bench_fig5,
+        bench_hetero,
+        bench_kernels,
+        bench_scale,
+        bench_table3,
+    )
 
     csv_rows: list[tuple[str, float, str]] = []
 
@@ -111,6 +120,21 @@ def main(argv=None) -> None:
                     f"hetero_{r['name']}_{r['arch']}",
                     r["wall_s"] * 1e6,
                     f"II={r['ii']};mII={r['mII']};verified={r['verified']}",
+                )
+            )
+
+    if args.only in (None, "scale"):
+        srep = bench_scale.run(options=options,
+                               budget_s=15 if args.quick else 30)
+        with open("BENCH_scale.json", "w") as f:
+            json.dump(srep, f, indent=2)
+        for r in srep["rows"]:
+            occ = (r["utilization"] or {}).get("occupancy", "")
+            csv_rows.append(
+                (
+                    f"scale_{r['name']}_{r['size']}x{r['size']}_{r['space_backend']}",
+                    r["wall_s"] * 1e6,
+                    f"II={r['ii']};verified={r['verified']};occupancy={occ}",
                 )
             )
 

@@ -46,8 +46,12 @@ MAPPER_FIELDS = (
     "max_slack",
     "connectivity",
     "backend",
+    "space_backend",
     "time_budget_s",
     "space_timeout_s",
+    "space_polish_timeout_s",
+    "space_timeout_growth",
+    "det_space_cap",
     "max_retries_per_window",
     "window_timeout_s",
     "max_register_pressure",
@@ -65,6 +69,7 @@ SERVICE_FIELDS = ("jobs", "deadline_s", "racing_workers")
 
 _CONNECTIVITIES = ("strict", "paper")
 _BACKENDS = ("auto", "cp", "cp-inc", "python", "z3")
+_SPACE_BACKENDS = ("auto", "exact", "anneal")
 
 
 @dataclass(frozen=True)
@@ -93,10 +98,14 @@ class CompileOptions:
     max_slack: int = 3                  # slack depth of the (II, slack) sweep
     connectivity: str = "strict"        # "strict" | "paper" (DESIGN.md §7)
     backend: str = "auto"               # time backend: auto | cp | z3
+    space_backend: str = "auto"         # space backend: auto | exact | anneal (§13)
     seed: int = 0                       # search diversification seed
     # ------------------------------------------------------------ budgets
     time_budget_s: float = 120.0        # total wall budget per compile
     space_timeout_s: float = 0.6        # per space-probe wall cap
+    space_polish_timeout_s: float = 2.5  # polish-dive wall cap floor
+    space_timeout_growth: float = 1.0   # per-round probe-cap growth factor
+    det_space_cap: int = 400_000        # per-round space-node cap (deterministic)
     max_retries_per_window: int = 8     # pending-partition retry width
     window_timeout_s: float = 10.0      # per time-solver-call wall cap
     # -------------------------------------------------------- constraints
@@ -135,6 +144,17 @@ class CompileOptions:
             raise ValueError(
                 f"backend must be one of {_BACKENDS}, got {self.backend!r}"
             )
+        if self.space_backend not in _SPACE_BACKENDS:
+            raise ValueError(
+                f"space_backend must be one of {_SPACE_BACKENDS}, "
+                f"got {self.space_backend!r}"
+            )
+        if self.space_timeout_s <= 0 or self.space_polish_timeout_s <= 0:
+            raise ValueError("space timeouts must be > 0")
+        if self.space_timeout_growth < 0:
+            raise ValueError("space_timeout_growth must be >= 0")
+        if self.det_space_cap < 1:
+            raise ValueError(f"det_space_cap must be >= 1, got {self.det_space_cap}")
         if self.max_slack < 0:
             raise ValueError(f"max_slack must be >= 0, got {self.max_slack}")
         if self.max_route_hops < 0:
@@ -285,6 +305,7 @@ _CLI_FIELDS = (
     "max_slack",
     "connectivity",
     "backend",
+    "space_backend",
     "seed",
     "time_budget_s",
     "max_register_pressure",
@@ -316,6 +337,10 @@ def add_cli_args(parser: argparse.ArgumentParser) -> None:
                    default=None)
     g.add_argument("--backend", choices=list(_BACKENDS), default=None,
                    help="time backend")
+    g.add_argument("--space-backend", choices=list(_SPACE_BACKENDS),
+                   default=None, dest="space_backend",
+                   help="space (placement) backend: exact bitset search, "
+                        "anneal clustered placement, or auto (fabric-sized)")
     g.add_argument("--seed", type=int, default=None,
                    help="search diversification seed")
     g.add_argument("--time-budget-s", type=float, default=None,

@@ -147,6 +147,8 @@ class CompileResult:
     res_ii: int = -1
     rec_ii: int = -1
     backend: str = ""
+    #: space (placement) engine that produced the mapping ("" when failed)
+    space_backend: str = ""
     #: cache provenance: "memory" | "disk" | "solve" (None when failed)
     source: str | None = None
     wall_s: float = 0.0
@@ -158,6 +160,8 @@ class CompileResult:
     cancelled: bool = False
     #: route-through movs spliced into the mapping (0 = direct embedding)
     route_movs: int = 0
+    #: optional ``simulate.utilization_report`` block (opt-in, see compile CLI)
+    utilization: dict | None = None
     mapping: "Mapping | None" = None
 
     # ------------------------------------------------------------ constructors
@@ -180,6 +184,7 @@ class CompileResult:
             res_ii=s.res_ii,
             rec_ii=s.rec_ii,
             backend=s.backend,
+            space_backend=s.space_backend,
             source=source,
             wall_s=wall_s if wall_s is not None else s.total_s,
             phases=PhaseTimings(
@@ -265,6 +270,7 @@ class CompileResult:
             res_ii=job.res_ii,
             rec_ii=job.rec_ii,
             backend=job.backend,
+            space_backend=job.space_backend,
             source=source,
             wall_s=job.wall_s,
             phases=PhaseTimings(
@@ -289,8 +295,13 @@ class CompileResult:
 
     # -------------------------------------------------------------------- I/O
     def as_dict(self) -> dict:
-        """The canonical JSON row (CLI report, benchmarks, service rows)."""
-        return {
+        """The canonical JSON row (CLI report, benchmarks, service rows).
+
+        The ``utilization`` key is opt-in (only present when the block was
+        computed, e.g. ``repro.compile --report-utilization``) so existing
+        row consumers keep seeing the exact historical shape by default.
+        """
+        row = {
             "name": self.name,
             "ok": self.ok,
             "ii": self.ii,
@@ -298,6 +309,7 @@ class CompileResult:
             "resII": self.res_ii,
             "recII": self.rec_ii,
             "backend": self.backend,
+            "space_backend": self.space_backend,
             "source": self.source,
             "wall_s": round(self.wall_s, 6),
             "phases": self.phases.as_dict(),
@@ -307,6 +319,9 @@ class CompileResult:
             "cancelled": self.cancelled,
             "route_movs": self.route_movs,
         }
+        if self.utilization is not None:
+            row["utilization"] = self.utilization
+        return row
 
 
 @dataclass

@@ -82,6 +82,9 @@ def build_parser() -> argparse.ArgumentParser:
     add_cli_args(ap)
     ap.add_argument("--report", metavar="PATH", default=None,
                     help="write the JSON report here (default: stdout summary only)")
+    ap.add_argument("--report-utilization", action="store_true",
+                    help="attach a fabric-utilization block (per-PE occupancy, "
+                         "route wire hops) to every successful row")
     ap.add_argument("--quiet", action="store_true")
     return ap
 
@@ -131,10 +134,23 @@ def main(argv=None) -> int:
 
     batch = compiler.compile_batch(dfgs)
 
+    if args.report_utilization:
+        from repro.core.simulate import utilization_report
+
+        for r in batch:
+            if r.ok and r.mapping is not None:
+                r.utilization = utilization_report(r.mapping)
+
     if not args.quiet:
         for r in batch:
             status = f"II={r.ii}" if r.ok else f"FAILED ({r.reason})"
             print(f"{r.name:20s} {status:24s} {r.wall_s:7.3f}s  [{r.source or r.failure}]")
+            if r.utilization is not None:
+                u = r.utilization
+                print(f"{'':20s}   util: {u['pes_used']}/{u['num_pes']} PEs, "
+                      f"{u['slots_used']}/{u['slots_total']} slots "
+                      f"({100 * u['occupancy']:.1f}%), "
+                      f"{u['route_wire_hops']} route wire hops")
         c = batch.cache_counters
         print(f"--- {len(batch)} jobs on {compiler.cgra} in {batch.wall_s:.2f}s "
               f"({batch.num_workers} workers): {c['solved']} solved, "

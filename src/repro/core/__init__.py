@@ -1,7 +1,8 @@
 """Core library: monomorphism-based CGRA mapping via space/time decoupling.
 
 The paper's contribution lives here: schedule.py (ASAP/ALAP/MobS/KMS/mII),
-time_smt.py (SMT time solution), mono.py (monomorphism space solution),
+time_smt.py (SMT time solution), space_backends/ (pluggable space solution:
+exact bitset monomorphism + annealing/clustered placement, DESIGN.md §13),
 mapper.py (the decoupled pipeline), baseline.py (joint SAT-MapIt-style
 comparison target), benchsuite.py (Table III DFG suite), simulate.py
 (functional validation), placement.py (the same algorithm placing model stage
@@ -24,6 +25,11 @@ from .schedule import (
     rec_ii,
     res_ii,
 )
+from .space_backends import (
+    SpaceBudget,
+    available_space_backends,
+    resolve_space_backend,
+)
 from .time_smt import (
     TimeSolution,
     TimeSolver,
@@ -37,6 +43,7 @@ __all__ = [
     "CGRA", "MRRG", "DFG", "Edge", "Route", "running_example", "splice_routes",
     "Mapping", "MapResult", "map_dfg",
     "check_monomorphism", "check_routes", "find_monomorphism",
+    "SpaceBudget", "available_space_backends", "resolve_space_backend",
     "KMS", "MobilitySchedule", "alap_schedule", "asap_schedule",
     "min_ii", "mobility_schedule", "rec_ii", "res_ii",
     "TimeSolution", "TimeSolver", "check_time_solution", "available_backends",

@@ -17,6 +17,9 @@ mirroring a machine from the paper or its companion line of work:
 * ``onehop_split_4x4`` — a one-hop grid whose memory and multiplier banks
   sit on opposite columns, 3 apart: the route-through demo machine
   (``--max-route-hops``, DESIGN.md §12).
+* ``mesh_50x50`` / ``mesh_100x100`` — large homogeneous meshes (2.5k and
+  10k PEs): the scale regime the annealing space backend opens up
+  (DESIGN.md §13; auto-selection sends them to ``anneal``).
 
 ``list_presets()``/``get_preset()`` are the registry surface the CLIs use.
 """
@@ -89,12 +92,22 @@ def onehop_split_4x4() -> ArchSpec:
     )
 
 
+def mesh_50x50() -> ArchSpec:
+    return ArchSpec(name="mesh_50x50", rows=50, cols=50)
+
+
+def mesh_100x100() -> ArchSpec:
+    return ArchSpec(name="mesh_100x100", rows=100, cols=100)
+
+
 PRESETS: dict[str, Callable[[], ArchSpec]] = {
     "paper_homogeneous_4x4": paper_homogeneous_4x4,
     "satmapit_edge_mem_4x4": satmapit_edge_mem_4x4,
     "mul_sparse_8x8": mul_sparse_8x8,
     "diagonal_20x20": diagonal_20x20,
     "onehop_split_4x4": onehop_split_4x4,
+    "mesh_50x50": mesh_50x50,
+    "mesh_100x100": mesh_100x100,
 }
 
 

@@ -44,6 +44,46 @@ def op_class(op: str) -> str:
     return _OP_CLASS.get(op, "alu")
 
 
+class _AdjacencyRow:
+    """One lazy row of the closed-adjacency predicate: bool per PE."""
+
+    __slots__ = ("_mask", "_n")
+
+    def __init__(self, mask: int, n: int) -> None:
+        self._mask = mask
+        self._n = n
+
+    def __getitem__(self, pe: int) -> bool:
+        if not 0 <= pe < self._n:
+            raise IndexError(pe)
+        return bool(self._mask >> pe & 1)
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __iter__(self):
+        m, n = self._mask, self._n
+        return (bool(m >> p & 1) for p in range(n))
+
+
+class _AdjacencyView:
+    """Lazy ``adjacency[u][v]`` view over ``closed_masks`` (no N×N table)."""
+
+    __slots__ = ("_masks",)
+
+    def __init__(self, masks: tuple[int, ...]) -> None:
+        self._masks = masks
+
+    def __getitem__(self, pe: int) -> _AdjacencyRow:
+        return _AdjacencyRow(self._masks[pe], len(self._masks))
+
+    def __len__(self) -> int:
+        return len(self._masks)
+
+    def __iter__(self):
+        return (self[p] for p in range(len(self._masks)))
+
+
 _TOPOLOGIES = ("mesh", "torus", "diagonal", "one-hop")
 
 # neighbour offsets per non-torus topology (torus wraps the mesh offsets)
@@ -169,14 +209,15 @@ class CGRA:
         return tuple(out)
 
     @cached_property
-    def adjacency(self) -> tuple[tuple[bool, ...], ...]:
-        """Closed adjacency (self-loop included): routability predicate."""
-        adj = [[False] * self.num_pes for _ in range(self.num_pes)]
-        for pe in range(self.num_pes):
-            adj[pe][pe] = True
-            for nb in self.neighbors[pe]:
-                adj[pe][nb] = True
-        return tuple(tuple(row) for row in adj)
+    def adjacency(self) -> "_AdjacencyView":
+        """Closed adjacency (self-loop included): routability predicate.
+
+        Indexed like the historical dense matrix (``adjacency[u][v]`` is a
+        bool) but evaluated lazily over ``closed_masks`` — a 100×100 fabric
+        would need a 10⁸-entry materialised matrix, which is what capped the
+        supported fabric size before the space-backend split (DESIGN.md §13).
+        """
+        return _AdjacencyView(self.closed_masks)
 
     @cached_property
     def closed_masks(self) -> tuple[int, ...]:

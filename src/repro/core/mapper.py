@@ -43,6 +43,11 @@ from dataclasses import dataclass, field
 from .cgra import CGRA
 from .dfg import DFG, Route, splice_routes
 from .mono import SpaceStats, check_monomorphism, check_routes, find_monomorphism
+from .space_backends import (
+    SpaceBudget,
+    create_space_backend,
+    resolve_space_backend_name,
+)
 from .schedule import min_ii, rec_ii, res_ii
 from .time_backends import resolve_backend_name
 from .time_smt import TimeSolution, TimeSolver, check_time_solution
@@ -178,6 +183,7 @@ class MapperStats:
     res_ii: int = -1
     rec_ii: int = -1
     backend: str = ""
+    space_backend: str = ""          # concrete engine that placed the result
     rounds: int = 0
     windows_opened: int = 0          # (II, slack) windows that got a solver
     cache_hit: bool = False          # served from the in-process LRU
@@ -210,7 +216,9 @@ def clear_mapping_cache() -> None:
     _MAP_CACHE.clear()
 
 
-def _cache_base_key(dfg, cgra, connectivity, max_rp, max_route_hops=0) -> tuple:
+def _cache_base_key(
+    dfg, cgra, connectivity, max_rp, max_route_hops=0, space_backend="exact",
+) -> tuple:
     # arch_token is None on the paper's homogeneous grid and a digest of the
     # capability layout otherwise (DESIGN.md §10) — heterogeneous mappings of
     # the same DFG must never alias homogeneous ones in either cache layer.
@@ -218,11 +226,13 @@ def _cache_base_key(dfg, cgra, connectivity, max_rp, max_route_hops=0) -> tuple:
     # guarantees under max_rp (scalar-only keying served oversubscribing
     # mappings across register sizings), and max_route_hops keys the route-
     # through allowance — a hops=2 mapping carries movs a hops=0 caller must
-    # never be served.
+    # never be served. space_backend is the *resolved* engine name ("auto"
+    # never reaches a key): exact and anneal explore different mapping
+    # distributions, so entries must not alias across engines (DESIGN.md §13.4).
     return (
         dfg.stable_hash(), cgra.rows, cgra.cols, cgra.topology,
         connectivity, max_rp, cgra.arch_token(),
-        cgra.pressure_token(max_rp), max_route_hops,
+        cgra.pressure_token(max_rp), max_route_hops, space_backend,
     )
 
 
@@ -372,8 +382,12 @@ def _map_dfg_impl(
     max_slack: int = DEFAULT_MAX_SLACK,
     connectivity: str = "strict",
     backend: str = "auto",
+    space_backend: str = "auto",
     time_budget_s: float = 120.0,
     space_timeout_s: float = 0.6,
+    space_polish_timeout_s: float = 2.5,
+    space_timeout_growth: float = 1.0,
+    det_space_cap: int = 400_000,
     max_retries_per_window: int = 8,
     window_timeout_s: float = 10.0,
     max_register_pressure: int | None = None,
@@ -422,6 +436,17 @@ def _map_dfg_impl(
       hops 0, then 1, ... then ``max_route_hops``, so direct embeddings are
       always preferred. 0 (the default) is the paper's direct-only behaviour,
       bit-identical to previous releases.
+    * ``space_backend`` picks the placement engine (DESIGN.md §13):
+      ``"exact"`` is the paper's complete bitset search, ``"anneal"`` the
+      clustered simulated-annealing engine for very large fabrics, and
+      ``"auto"`` (default) sizes the choice to the fabric — exact up to
+      ``AUTO_EXACT_MAX_PES`` (400) PEs, anneal above, with an exact-engine
+      rescue leg on deep portfolio rounds. ``space_timeout_s`` /
+      ``space_polish_timeout_s`` / ``space_timeout_growth`` shape the
+      per-call wall caps (polish dives get
+      ``max(space_polish_timeout_s, space_timeout_s)``; fresh rounds grow as
+      ``space_timeout_s * (1 + space_timeout_growth * round)``), and
+      ``det_space_cap`` bounds per-round space nodes in deterministic mode.
     * ``deterministic=True`` swaps every wall-clock limit for node/step
       budgets so results are load-independent and reproducible;
       ``time_budget_s`` / ``space_timeout_s`` / ``window_timeout_s`` are then
@@ -462,7 +487,19 @@ def _map_dfg_impl(
     # resolve now so a bad backend name raises here instead of being
     # swallowed by the per-window infeasibility handler below
     backend = resolve_backend_name(backend)
+    # "auto" is fabric-sized (exact <= AUTO_EXACT_MAX_PES PEs, anneal above,
+    # DESIGN.md §13.3); remember the request so auto-on-large can still fall
+    # back to the exact engine on deep rounds without surprising a caller
+    # who *asked* for anneal
+    space_auto = space_backend == "auto"
+    space_backend = resolve_space_backend_name(space_backend, cgra)
+    space_engine = create_space_backend(space_backend)
+    exact_fallback = (
+        create_space_backend("exact")
+        if space_auto and space_backend != "exact" else None
+    )
     stats = MapperStats()
+    stats.space_backend = space_backend
 
     def timed_validate(mapping: Mapping) -> list[str]:
         t0 = _time.perf_counter()
@@ -498,7 +535,8 @@ def _map_dfg_impl(
     disk = None
     if use_cache:
         base_key = _cache_base_key(
-            dfg, cgra, connectivity, max_register_pressure, max_route_hops
+            dfg, cgra, connectivity, max_register_pressure, max_route_hops,
+            space_backend,
         )
         hit = _cache_get(base_key, stats.m_ii, hi)
         if hit is not None:
@@ -553,9 +591,10 @@ def _map_dfg_impl(
         for idx, (ii, s) in enumerate(ii_slack_windows(stats.m_ii, hi, max_slack))
         if idx % window_stride == window_offset
     ]
-    # deterministic mode has no wall-clock backstop: cap the per-round node
-    # budgets so total work is bounded by rounds x windows x node caps
-    det_space_cap = 400_000
+    # deterministic mode has no wall-clock backstop: the per-round node
+    # budgets are capped so total work is bounded by rounds x windows x node
+    # caps — det_space_cap is a CompileOptions field (one source of truth
+    # shared with CI profiles); the cp-step cap stays local
     det_cp_cap = 400_000
     max_rounds = 6 if deterministic else 16
     # anytime polish: extra rounds on lower-II windows; wall-capped when not
@@ -564,6 +603,7 @@ def _map_dfg_impl(
     solvers: list[TimeSolver] = []
     best: Mapping | None = None
     polish_left = 0
+    produced_by = space_backend      # engine that placed the current best
 
     def out_of_time() -> bool:
         if should_stop is not None and should_stop():
@@ -578,6 +618,7 @@ def _map_dfg_impl(
             if errs:  # defensive: should be impossible
                 raise AssertionError(f"mapper produced invalid mapping: {errs}")
             stats.final_ii = mapping.ii
+            stats.space_backend = produced_by
             if use_cache:
                 _cache_put(base_key, mapping)
                 if disk is not None:
@@ -589,14 +630,24 @@ def _map_dfg_impl(
         sol: TimeSolution, w: _Window, rnd: int,
         node_budget: int, restarts: int, salt: int = 0,
     ) -> Mapping | None:
+        nonlocal produced_by
         sstats = SpaceStats()
         if deterministic:
             timeout = None
         elif best is not None:      # polish dive: deep per-call wall cap
-            timeout = max(2.5, space_timeout_s)
+            timeout = max(space_polish_timeout_s, space_timeout_s)
         else:
-            timeout = space_timeout_s * (1 + rnd)
+            timeout = space_timeout_s * (1 + space_timeout_growth * rnd)
         space = None
+        # portfolio per (II, slack, fabric size): the resolved engine leads;
+        # when "auto" resolved to anneal (very large fabric), deep rounds add
+        # an exact-engine rescue leg — anneal is incomplete, and by round 2 a
+        # partition that keeps failing has earned a complete search. Small
+        # fabrics never take the extra leg, keeping the historical path
+        # bit-identical.
+        engines = [space_engine]
+        if exact_fallback is not None and rnd >= 2:
+            engines.append(exact_fallback)
         # escalation order (DESIGN.md §12.4): direct first, then one more
         # allowed hop per level — route-throughs are only spent when no
         # tighter embedding of this partition is found. hops == 0 takes the
@@ -605,20 +656,27 @@ def _map_dfg_impl(
         # a partition can never spend more than the historical cap in total.
         if timeout is not None and max_route_hops:
             timeout /= max_route_hops + 1
-        for hops in range(max_route_hops + 1):
-            space = find_monomorphism(
-                dfg, cgra, sol.labels, w.ii,
-                timeout_s=timeout,
-                node_budget=node_budget,
-                restarts=restarts,
-                seed=seed * 8191 + rnd * 127 + w.slack * 17 + salt,
-                stats=sstats,
-                **(
-                    {} if hops == 0
-                    else {"t_abs": sol.t_abs, "max_route_hops": hops}
-                ),
-            )
+        for engine in engines:
+            for hops in range(max_route_hops + 1):
+                space = engine.place(
+                    dfg, cgra, sol.labels, w.ii,
+                    budget=SpaceBudget(
+                        timeout_s=timeout,
+                        node_budget=node_budget,
+                        restarts=restarts,
+                    ),
+                    seed=seed * 8191 + rnd * 127 + w.slack * 17 + salt,
+                    stats=sstats,
+                    should_stop=should_stop,
+                    **(
+                        {} if hops == 0
+                        else {"t_abs": sol.t_abs, "max_route_hops": hops}
+                    ),
+                )
+                if space is not None:
+                    break
             if space is not None:
+                produced_by = engine.name
                 break
         stats.space_phase_s += sstats.search_time_s
         stats.space_nodes_visited += sstats.nodes_visited

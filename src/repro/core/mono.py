@@ -1,566 +1,31 @@
-"""Monomorphism-based space search (paper §IV-C), bitset engine.
+"""Compatibility shim: the monomorphism engine lives in ``space_backends``.
 
-Given a time solution (kernel label per DFG node), find an injective,
-label-preserving, edge-preserving embedding of the undirected DFG into the
-MRRG. Under the register-file architecture (see core/cgra.py) an MRRG edge
-exists between (pe_u, t_u) and (pe_v, t_v) iff pe_u equals-or-neighbours pe_v,
-so the search reduces to placing each node on a PE such that
-
-  * at each kernel step, every PE hosts at most one node   (mono1 + mono2)
-  * G-adjacent nodes land on closed-adjacent PEs           (mono3)
-
-The search is a VF2/RI-style backtracking specialised to the label structure:
-connected expansion order (most-placed-neighbours first), candidate sets from
-the intersection of placed neighbours' closed neighbourhoods, forward checking
-(every placed node must retain enough free adjacent slots per step for its
-unplaced neighbours), and randomised restarts — the classic recipe that gives
-VF3-class robustness [29,30] while exploiting the time labels, which partition
-the injectivity constraint by step and keep the search shallow.
-
-All PE sets are int bitmasks (bit p = PE p; layout contract in DESIGN.md §5,
-masks precomputed in ``CGRA.closed_masks``): candidate intersection is a chain
-of ANDs maintained incrementally per node, occupancy per kernel step is one
-word, and forward checking is popcount over ``closed & ~occ`` — O(words) per
-check instead of O(|set|), which is what lets 20x20 grids (400-bit words)
-search millions of candidates per second in pure Python.
-
-Budgets: ``timeout_s`` (wall clock) and/or ``node_budget`` (deterministic
-visited-node cap, used by tests and the mapper's deterministic mode).
+The bitset search (paper §IV-C) moved, unchanged, to
+``core/space_backends/exact.py`` when the space phase became pluggable
+(DESIGN.md §13); the shared datatypes and route-repair machinery sit in
+``core/space_backends/base.py``. This module keeps the historical import
+surface — ``from repro.core.mono import find_monomorphism`` and friends —
+working for existing callers and tests.
 """
 
-from __future__ import annotations
+from .space_backends.base import (  # noqa: F401
+    MaterializedRoute,
+    SpaceSolution,
+    SpaceStats,
+    _RouteContext,
+    check_monomorphism,
+    check_routes,
+)
+from .space_backends.exact import (  # noqa: F401
+    _search_once,
+    find_monomorphism,
+)
 
-import random
-import time as _time
-from dataclasses import dataclass
-
-from .cgra import CGRA, op_class
-from .dfg import DFG
-from .time_backends.base import mov_slot_headroom
-
-
-@dataclass(frozen=True)
-class MaterializedRoute:
-    """One realised route-through: the original edge, the intermediate PEs,
-    and the absolute firing times of the movs that will occupy them."""
-
-    edge: tuple[int, int, int]     # (src, dst, distance) of the routed edge
-    path: tuple[int, ...]          # intermediate PEs, src side first
-    times: tuple[int, ...]         # absolute mov times, strictly increasing
-
-
-@dataclass
-class SpaceSolution:
-    ii: int
-    placement: list[int]  # node -> PE index
-    # route-throughs materialised by the repair loop; empty = direct embedding
-    routes: tuple[MaterializedRoute, ...] = ()
-
-
-@dataclass
-class SpaceStats:
-    search_time_s: float = 0.0
-    nodes_visited: int = 0
-    backtracks: int = 0
-    restarts: int = 0
-    route_failures: int = 0        # complete placements whose movs didn't fit
-
-
-class _RouteContext:
-    """Per-search route-through state (DESIGN.md §12.1).
-
-    Precomputes, from the time solution, how far apart each adjacent node
-    pair may be placed: an edge with absolute-time gap ``g`` (``t_dst -
-    t_src + II*distance``) can absorb at most ``g - 1`` movs, each of which
-    needs a strictly intermediate firing time, so the pair's placement may
-    sit at closed-reach distance ``min(1 + max_hops, g)``. The search relaxes
-    its candidate masks accordingly; :meth:`materialize` then realises every
-    non-direct edge as a concrete mov chain over free (PE, step) slots — or
-    fails, sending the search back to try another placement (the repair
-    loop).
-    """
-
-    def __init__(
-        self,
-        dfg: DFG,
-        cgra: CGRA,
-        labels: list[int],
-        t_abs: list[int],
-        ii: int,
-        max_hops: int,
-    ) -> None:
-        if t_abs is None:
-            raise ValueError("route-through search needs the absolute schedule")
-        self.dfg = dfg
-        self.cgra = cgra
-        self.labels = labels
-        self.t_abs = t_abs
-        self.ii = ii
-        self.max_hops = max_hops
-        self.closed = cgra.closed_masks
-        self.alu_mask = cgra.capability_masks["alu"]
-        # reach tables for every allowed hop level, 1-indexed by hop count
-        self.reach = [None] + [
-            cgra.reach_masks(h) for h in range(1, max_hops + 2)
-        ]
-        # per adjacent pair, the allowed placement reach (min over the
-        # directed edges between the pair: every edge must be realisable)
-        allow: dict[tuple[int, int], int] = {}
-        for e in dfg.edges:
-            if e.src == e.dst:
-                continue
-            gap = t_abs[e.dst] - t_abs[e.src] + ii * e.distance
-            h = max(1, min(1 + max_hops, gap))
-            key = (e.src, e.dst) if e.src < e.dst else (e.dst, e.src)
-            allow[key] = min(allow.get(key, h), h)
-        self.pair_allow = allow
-        # widest allowance per node (conservative forward-checking mask)
-        node_allow = [1] * dfg.num_nodes
-        for (u, v), h in allow.items():
-            node_allow[u] = max(node_allow[u], h)
-            node_allow[v] = max(node_allow[v], h)
-        self.node_allow = node_allow
-
-    def pair_masks(self, u: int, v: int):
-        """Reach-mask table governing where ``u`` may sit relative to ``v``."""
-        key = (u, v) if u < v else (v, u)
-        return self.reach[self.pair_allow[key]]
-
-    # ------------------------------------------------------- materialization
-    def materialize(
-        self, placement: list[int], occ: list[int]
-    ) -> list[MaterializedRoute] | None:
-        """Realise every non-direct edge as a mov chain, or return None.
-
-        Deterministic greedy-with-path-backtracking per edge (edges in DFG
-        order, paths in ascending-PE order, times earliest-first); movs claim
-        (PE, step) slots against both the placed nodes (``occ``) and each
-        other. The shared slot accounting (time_backends.base.
-        ``mov_slot_headroom``) fast-fails steps with no capacity left.
-        """
-        closed, ii = self.closed, self.ii
-        num_pes = self.cgra.num_pes
-        headroom = mov_slot_headroom(self.labels, ii, num_pes)
-        extra = [0] * ii                      # mov occupancy per kernel step
-        routes: list[MaterializedRoute] = []
-        for e in self.dfg.edges:
-            if e.src == e.dst:
-                continue
-            p_src, p_dst = placement[e.src], placement[e.dst]
-            if (closed[p_src] >> p_dst) & 1:
-                continue                      # direct edge, no movs
-            gap = self.t_abs[e.dst] - self.t_abs[e.src] + ii * e.distance
-            route = self._route_edge(e, p_src, p_dst, gap, occ, extra, headroom)
-            if route is None:
-                return None
-            for pe, t in zip(route.path, route.times):
-                extra[t % ii] |= 1 << pe
-                headroom[t % ii] -= 1
-            routes.append(route)
-        return routes
-
-    def _route_edge(
-        self, e, p_src: int, p_dst: int, gap: int,
-        occ: list[int], extra: list[int], headroom: list[int],
-    ) -> MaterializedRoute | None:
-        ii = self.ii
-        t_lo = self.t_abs[e.src]              # movs fire strictly after this
-        t_hi = t_lo + gap                     # ... and strictly before this
-        max_movs = min(self.max_hops, gap - 1)
-        closed, alu = self.closed, self.alu_mask
-
-        def assign_times(path: tuple[int, ...]) -> tuple[int, ...] | None:
-            k = len(path)
-            ts: list[int] = []
-            t_prev = t_lo
-            for j, pe in enumerate(path):
-                t = t_prev + 1
-                limit = t_hi - (k - j)        # leave room for the tail movs
-                while t <= limit and ((occ[t % ii] | extra[t % ii]) >> pe) & 1:
-                    t += 1
-                if t > limit:
-                    return None
-                ts.append(t)
-                t_prev = t
-            return tuple(ts)
-
-        budget = 256                          # path attempts per edge
-        free_total = sum(h for h in headroom if h > 0)
-        for k in range(1, max_movs + 1):
-            # a chain of k movs needs k free slots (steps may host several)
-            if free_total < k:
-                return None
-            # DFS over intermediate PEs: step j must stay within closed reach
-            # of its predecessor and within (k - j) hops of the destination
-            stack: list[tuple[int, tuple[int, ...]]] = [(p_src, ())]
-            while stack and budget > 0:
-                prev, path = stack.pop()
-                j = len(path)
-                if j == k:
-                    budget -= 1
-                    ts = assign_times(path)
-                    if ts is not None:
-                        return MaterializedRoute(
-                            edge=(e.src, e.dst, e.distance),
-                            path=path, times=ts,
-                        )
-                    continue
-                cand = closed[prev] & alu & self.reach[k - j][p_dst]
-                pes: list[int] = []
-                while cand:
-                    b = cand & -cand
-                    pes.append(b.bit_length() - 1)
-                    cand ^= b
-                # LIFO stack: push descending so lowest PE is explored first
-                for pe in reversed(pes):
-                    stack.append((pe, path + (pe,)))
-        return None
-
-
-def find_monomorphism(
-    dfg: DFG,
-    cgra: CGRA,
-    labels: list[int],
-    ii: int,
-    *,
-    timeout_s: float | None = 4.0,
-    node_budget: int | None = None,
-    restarts: int = 6,
-    seed: int = 0,
-    stats: SpaceStats | None = None,
-    t_abs: list[int] | None = None,
-    max_route_hops: int = 0,
-) -> SpaceSolution | None:
-    """Randomised-restart wrapper around one backtracking dive per seed.
-
-    With ``timeout_s=None`` and a ``node_budget``, the search is fully
-    deterministic: identical inputs always visit the identical tree prefix.
-
-    ``max_route_hops > 0`` enables route-through repair (DESIGN.md §12):
-    G-adjacent nodes may then land up to ``1 + max_route_hops`` closed-
-    adjacency steps apart, and every non-direct edge of a complete placement
-    is realised as a chain of ``mov`` nodes over free (PE, step) slots —
-    returned in ``SpaceSolution.routes``. This needs the absolute schedule
-    (``t_abs``): an edge's hop allowance is bounded by its time gap, and the
-    movs' firing times are picked inside it. ``max_route_hops=0`` (default)
-    is bit-identical to the historical direct-only search.
-    """
-    stats = stats if stats is not None else SpaceStats()
-    route_ctx = (
-        _RouteContext(dfg, cgra, labels, t_abs, ii, max_route_hops)
-        if max_route_hops > 0 else None
-    )
-    start = _time.perf_counter()
-    budget = timeout_s if timeout_s is not None else float("inf")
-    n_restarts = max(1, restarts)
-    # geometric restart schedule: cheap early probes, one deep final dive —
-    # weights 1,1,2,4,...  (the last restart gets ~half the total budget)
-    weights = [1] + [1 << min(r, 30) for r in range(n_restarts - 1)]
-    total_w = sum(weights)
-    for r in range(n_restarts):
-        remaining = budget - (_time.perf_counter() - start)
-        if remaining <= 0:
-            break
-        stats.restarts += 1
-        frac = weights[r] / total_w
-        sol = _search_once(
-            dfg, cgra, labels, ii,
-            deadline=(
-                _time.perf_counter() + min(budget * frac, remaining)
-                if budget != float("inf") else None
-            ),
-            node_budget=(
-                max(1, int(node_budget * frac)) if node_budget is not None else None
-            ),
-            rng=random.Random(seed * 7919 + r),
-            shuffle=r > 0,   # first dive is deterministic greedy
-            stats=stats,
-            route_ctx=route_ctx,
-        )
-        if sol is not None:
-            placement, routes = sol
-            stats.search_time_s += _time.perf_counter() - start
-            return SpaceSolution(ii=ii, placement=placement, routes=routes)
-    stats.search_time_s += _time.perf_counter() - start
-    return None
-
-
-def _search_once(
-    dfg: DFG,
-    cgra: CGRA,
-    labels: list[int],
-    ii: int,
-    *,
-    deadline: float | None,
-    node_budget: int | None,
-    rng: random.Random,
-    shuffle: bool,
-    stats: SpaceStats,
-    route_ctx: _RouteContext | None = None,
-) -> tuple[list[int], tuple[MaterializedRoute, ...]] | None:
-    n = dfg.num_nodes
-    adj_sets = dfg.undirected_adjacency()
-    adj = [tuple(sorted(s)) for s in adj_sets]
-    num_pes = cgra.num_pes
-    closed = cgra.closed_masks
-    full = (1 << num_pes) - 1
-
-    if n > num_pes * ii:
-        return None
-    for v in range(n):
-        if not 0 <= labels[v] < ii:
-            raise ValueError(f"label out of range for node {v}: {labels[v]}")
-
-    # Capability pruning (DESIGN.md §10): a node may only sit on a PE whose
-    # class set covers its op — seed each candidate mask with the op-class
-    # mask so incapable placements vanish at the bitset layer instead of
-    # being discovered (and backtracked out of) by the search. Homogeneous
-    # grids keep the full mask, leaving the search path bit-identical.
-    if cgra.heterogeneous:
-        cap_masks = cgra.capability_masks
-        node_mask = [cap_masks[op_class(dfg.ops[v])] for v in range(n)]
-        if not all(node_mask):
-            return None            # some op has no capable PE at all
-    else:
-        node_mask = [full] * n
-
-    degs = [len(adj[v]) for v in range(n)]
-    # static value-order rank: interior PEs (largest closed nbhd) first keeps
-    # future intersections large; jitter on restarts
-    pe_rank = sorted(range(num_pes), key=lambda p: -closed[p].bit_count())
-    if shuffle:
-        rng.shuffle(pe_rank)
-    rank_of = [0] * num_pes
-    for i, p in enumerate(pe_rank):
-        rank_of[p] = i
-
-    placement = [-1] * n
-    occ = [0] * ii                       # occupied-PE mask per kernel step
-    # candidate mask per node: op-class mask AND placed neighbours' closed masks
-    cand = list(node_mask)
-    placed_nbrs = [0] * n
-    # unplaced-neighbour demand per (node, step), updated incrementally
-    need = [[0] * ii for _ in range(n)]
-    for v in range(n):
-        for u in adj[v]:
-            need[v][labels[u]] += 1
-
-    budget_left = node_budget if node_budget is not None else -1
-    check_tick = 0
-
-    # route-through relaxation: a placed node's reachable area for forward
-    # checking, and the routes of the accepted placement (repair loop)
-    if route_ctx is not None:
-        node_reach = [
-            route_ctx.reach[route_ctx.node_allow[v]] for v in range(n)
-        ]
-    found_routes: list[MaterializedRoute] = []
-
-    def complete() -> bool:
-        """Accept a full placement; under routing, movs must materialise."""
-        if route_ctx is None:
-            return True
-        routes = route_ctx.materialize(placement, occ)
-        if routes is None:
-            stats.route_failures += 1
-            return False
-        found_routes[:] = routes
-        return True
-
-    def forward_ok(u: int) -> bool:
-        """Placed node u must keep enough free adjacent slots per step."""
-        if route_ctx is None:
-            cu = closed[placement[u]]
-        else:
-            cu = node_reach[u][placement[u]]
-        nu = need[u]
-        for step in range(ii):
-            want = nu[step]
-            if want and (cu & ~occ[step]).bit_count() < want:
-                return False
-        return True
-
-    def seed_candidates(v: int) -> list[int]:
-        free = node_mask[v] & ~occ[labels[v]]
-        return [p for p in pe_rank if (1 << p) & free]
-
-    def cand_list(v: int) -> list[int]:
-        m = cand[v] & ~occ[labels[v]]
-        out = []
-        while m:
-            b = m & -m
-            out.append(b.bit_length() - 1)
-            m ^= b
-        out.sort(key=rank_of.__getitem__)   # per-restart jitter lives in pe_rank
-        return out
-
-    def place(v: int, p: int) -> list[tuple[int, int]]:
-        placement[v] = p
-        occ[labels[v]] |= 1 << p
-        cp = closed[p]
-        undo: list[tuple[int, int]] = []
-        lv = labels[v]
-        for u in adj[v]:
-            need[u][lv] -= 1
-            if placement[u] < 0:
-                old = cand[u]
-                if route_ctx is None:
-                    new = old & cp
-                else:
-                    # per-pair reach: how far u may sit from v is bounded by
-                    # the routable hop allowance of their connecting edges
-                    new = old & route_ctx.pair_masks(u, v)[p]
-                if new != old:
-                    undo.append((u, old))
-                    cand[u] = new
-            placed_nbrs[u] += 1
-        return undo
-
-    def unplace(v: int, p: int, undo: list[tuple[int, int]]) -> None:
-        lv = labels[v]
-        for u in adj[v]:
-            need[u][lv] += 1
-            placed_nbrs[u] -= 1
-        for u, old in undo:
-            cand[u] = old
-        occ[labels[v]] &= ~(1 << p)
-        placement[v] = -1
-
-    def select_var() -> tuple[int, list[int]] | None:
-        """Dynamic MRV: among frontier nodes (>=1 placed neighbour), pick the
-        one with the fewest candidate PEs; empty frontier seeds a component."""
-        best_v, best_c = -1, -1
-        for v in range(n):
-            if placement[v] >= 0 or not placed_nbrs[v]:
-                continue
-            c = (cand[v] & ~occ[labels[v]]).bit_count()
-            if c == 0:
-                return (v, [])          # dead end: fail fast
-            if best_v < 0 or (c, -degs[v]) < (best_c, -degs[best_v]):
-                best_v, best_c = v, c
-                if c == 1:
-                    break
-        if best_v >= 0:
-            return best_v, cand_list(best_v)
-        # new component seed: highest-degree unplaced node
-        seeds = [v for v in range(n) if placement[v] < 0]
-        if not seeds:
-            return None
-        v = max(seeds, key=lambda u: (degs[u], rng.random() if shuffle else 0))
-        return v, seed_candidates(v)
-
-    def rec(placed_count: int) -> int:
-        """1 = solved, 0 = subtree exhausted, -1 = budget/deadline abort."""
-        nonlocal budget_left, check_tick
-        if placed_count == n:
-            return 1 if complete() else 0
-        check_tick += 1
-        if deadline is not None and not check_tick & 0xFF:
-            if _time.perf_counter() > deadline:
-                return -1
-        sel = select_var()
-        if sel is None:
-            return 1 if complete() else 0
-        v, cands = sel
-        lv = labels[v]
-        for p in cands:
-            stats.nodes_visited += 1
-            if budget_left >= 0:
-                budget_left -= 1
-                if budget_left < 0:
-                    return -1
-            undo = place(v, p)
-            # arc check: every unplaced neighbour must retain a candidate
-            ok = all(
-                cand[u] & ~occ[labels[u]]
-                for u in adj[v]
-                if placement[u] < 0
-            )
-            if ok and forward_ok(v):
-                ok = all(
-                    forward_ok(u) for u in adj[v] if placement[u] >= 0
-                )
-            if ok:
-                r = rec(placed_count + 1)
-                if r:
-                    if r > 0:
-                        return 1
-                    unplace(v, p, undo)
-                    return -1
-            stats.backtracks += 1
-            unplace(v, p, undo)
-        return 0
-
-    if rec(0) > 0:
-        return list(placement), tuple(found_routes)
-    return None
-
-
-def check_routes(
-    dfg: DFG, cgra: CGRA, t_abs: list[int], placement: list[int],
-    ii: int, routes,
-) -> list[str]:
-    """Independent validator of route-through provenance (DESIGN.md §12.2).
-
-    ``dfg`` is the *rewritten* DFG and ``routes`` its ``dfg.Route`` records.
-    Every structural property (slot exclusivity, chain adjacency, dependency
-    ordering) is already covered by ``check_monomorphism``/
-    ``check_time_solution`` on the rewritten graph; this re-checks the
-    route-specific contract — movs really are movs, chains connect their
-    endpoints through closed-adjacent PEs, and firing times sit strictly
-    inside the routed edge's time window.
-    """
-    errs: list[str] = []
-    for r in routes:
-        chain = (r.src, *r.movs, r.dst)
-        for m in r.movs:
-            if not 0 <= m < dfg.num_nodes or dfg.ops[m] != "mov":
-                errs.append(f"route {r.src}->{r.dst}: node {m} is not a mov")
-        for a, b in zip(chain, chain[1:]):
-            if not cgra.adjacency[placement[a]][placement[b]]:
-                errs.append(
-                    f"route {r.src}->{r.dst}: hop {a}->{b} maps to "
-                    f"non-adjacent PEs {placement[a]},{placement[b]}"
-                )
-        lo, hi = t_abs[r.src], t_abs[r.dst] + ii * r.distance
-        times = [t_abs[m] for m in r.movs]
-        if not all(x < y for x, y in zip([lo, *times], [*times, hi])):
-            errs.append(
-                f"route {r.src}->{r.dst}: mov times {times} not strictly "
-                f"inside ({lo}, {hi})"
-            )
-    return errs
-
-
-def check_monomorphism(
-    dfg: DFG, cgra: CGRA, labels: list[int], placement: list[int], ii: int
-) -> list[str]:
-    """Independent validator of mono1/mono2/mono3; returns violations."""
-    errs: list[str] = []
-    seen: dict[tuple[int, int], int] = {}
-    for v in dfg.nodes:
-        key = (placement[v], labels[v])
-        if key in seen:
-            errs.append(f"mono1: nodes {seen[key]} and {v} share MRRG vertex {key}")
-        seen[key] = v
-        if not 0 <= placement[v] < cgra.num_pes:
-            errs.append(f"node {v} placed out of range: {placement[v]}")
-            continue
-        if cgra.heterogeneous:
-            cls = op_class(dfg.ops[v])
-            if not cgra.capable(placement[v], cls):
-                errs.append(
-                    f"capability: node {v} ({dfg.ops[v]}, class {cls!r}) "
-                    f"placed on incapable PE {placement[v]}"
-                )
-    adj = dfg.undirected_adjacency()
-    for v in dfg.nodes:
-        for u in adj[v]:
-            if u < v:
-                continue
-            if not cgra.adjacency[placement[u]][placement[v]]:
-                errs.append(
-                    f"mono3: edge {{{u},{v}}} maps to non-adjacent PEs "
-                    f"{placement[u]},{placement[v]}"
-                )
-    return errs
+__all__ = [
+    "MaterializedRoute",
+    "SpaceSolution",
+    "SpaceStats",
+    "check_monomorphism",
+    "check_routes",
+    "find_monomorphism",
+]

@@ -102,6 +102,7 @@ class JobReport:
     cache_hit: bool = False
     disk_cache_hit: bool = False
     backend: str = ""
+    space_backend: str = ""
     reason: str = ""
     cancelled: bool = False
     time_phase_s: float = 0.0
@@ -136,6 +137,7 @@ class JobReport:
             "cache_hit": self.cache_hit,
             "disk_cache_hit": self.disk_cache_hit,
             "backend": self.backend,
+            "space_backend": self.space_backend,
             "reason": self.reason,
             "cancelled": self.cancelled,
             "time_phase_s": round(self.time_phase_s, 4),
@@ -185,6 +187,7 @@ def _job_report(job: CompileJob, res: MapResult, wall_s: float) -> JobReport:
         cache_hit=res.stats.cache_hit,
         disk_cache_hit=res.stats.disk_cache_hit,
         backend=res.stats.backend,
+        space_backend=res.stats.space_backend,
         reason=res.reason,
         time_phase_s=res.stats.time_phase_s,
         space_phase_s=res.stats.space_phase_s,
@@ -389,6 +392,12 @@ def map_dfg_racing(
     contract a wall-clock race cannot honor), falls back to plain
     :func:`~repro.core.mapper.map_dfg`. Remaining keyword ``options`` are
     forwarded to ``map_dfg`` unchanged.
+
+    When the space backend is left on ``auto`` and the fabric is large
+    enough that auto resolves to ``anneal`` (DESIGN.md §13.3), the race
+    additionally stripes *engines*: even-offset workers run the anneal
+    favourite, odd-offset workers the exact engine. Whichever placement
+    style fits the problem wins the race; small fabrics are unaffected.
     """
     from ..mapper import DEFAULT_MAX_SLACK, default_max_ii, ii_slack_windows
     from ..schedule import min_ii
@@ -405,6 +414,17 @@ def map_dfg_racing(
 
     import multiprocessing as mp
 
+    stripes = [options] * workers
+    if options.get("space_backend", "auto") == "auto":
+        from ..space_backends import resolve_space_backend_name
+
+        if resolve_space_backend_name("auto", cgra) == "anneal":
+            stripes = [
+                {**options,
+                 "space_backend": "anneal" if i % 2 == 0 else "exact"}
+                for i in range(workers)
+            ]
+
     t0 = _time.perf_counter()
     ctx = mp.get_context()
     stop_event = ctx.Event()
@@ -415,7 +435,7 @@ def map_dfg_racing(
         initargs=(stop_event,),
     ) as pool:
         futs = [
-            pool.submit(_race_worker, dfg, cgra, i, workers, options)
+            pool.submit(_race_worker, dfg, cgra, i, workers, stripes[i])
             for i in range(workers)
         ]
         results = [f.result() for f in futs]

@@ -39,7 +39,10 @@ from dataclasses import dataclass, field
 # route-through hop allowance, and the payload grew a ``routes`` list
 # (DESIGN.md §12) — pre-fix entries keyed on the scalar pressure limit alone
 # could oversubscribe per-class register files and must never be served.
-CACHE_VERSION = 3
+# v4: base key grew the resolved space-backend name (DESIGN.md §13.4) —
+# exact and anneal placements are both valid but must never be served
+# across engines, or backend provenance and benchmarks would lie.
+CACHE_VERSION = 4
 
 _ENTRY_SUFFIX = ".json"
 
@@ -93,6 +96,7 @@ class DiskMappingCache:
         arch_token: str | None = None,
         pressure_token=None,
         max_route_hops: int = 0,
+        space_backend: str = "exact",
     ) -> tuple:
         """Canonical base key; mirrors the in-memory LRU's ``_cache_base_key``.
 
@@ -101,11 +105,13 @@ class DiskMappingCache:
         ``pressure_token`` is ``CGRA.pressure_token(max_register_pressure)``
         — the *effective per-PE* register-bound vector the mapper guarantees
         (None when the guarantee is off); ``max_route_hops`` keys the
-        route-through allowance the mapping was searched under.
+        route-through allowance the mapping was searched under;
+        ``space_backend`` is the *resolved* placement engine name ("auto"
+        never reaches a key — DESIGN.md §13.4).
         """
         return (dfg_hash, rows, cols, topology, connectivity,
                 max_register_pressure, arch_token, pressure_token,
-                max_route_hops)
+                max_route_hops, space_backend)
 
     def _digest(self, base_key: tuple, ii: int) -> str:
         payload = json.dumps(

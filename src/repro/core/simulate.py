@@ -256,6 +256,42 @@ def check_equivalence(
     return rep
 
 
+def utilization_report(mapping: Mapping) -> dict:
+    """Fabric-occupancy summary of a mapping (JSON-friendly).
+
+    Per the modulo-scheduling model, each node occupies exactly one
+    ``(pe, t_abs % ii)`` slot, so a fabric of ``num_pes`` PEs at initiation
+    interval ``ii`` offers ``num_pes * ii`` slots. The report gives:
+
+    * ``pes_used`` / ``occupancy`` — how much of the fabric the placement
+      actually touches (the interesting number on 50×50+ grids, where a
+      kernel lights up a tiny corner);
+    * ``per_pe`` — used-slot count for each *used* PE only (an empty dict
+      entry per idle PE would dwarf the row on large fabrics);
+    * ``route_movs`` / ``route_wire_hops`` — route-through cost from
+      ``Mapping.routes``: a spliced route with *n* movs spans *n + 1*
+      wire hops between its original producer and consumer.
+    """
+    ii, num_pes = mapping.ii, mapping.cgra.num_pes
+    per_pe: dict[int, int] = {}
+    for v in mapping.dfg.nodes:
+        pe = mapping.placement[v]
+        per_pe[pe] = per_pe.get(pe, 0) + 1
+    slots_used = sum(per_pe.values())
+    slots_total = num_pes * ii
+    return {
+        "num_pes": num_pes,
+        "ii": ii,
+        "pes_used": len(per_pe),
+        "slots_used": slots_used,
+        "slots_total": slots_total,
+        "occupancy": round(slots_used / slots_total, 6),
+        "per_pe": {pe: per_pe[pe] for pe in sorted(per_pe)},
+        "route_movs": mapping.num_route_movs,
+        "route_wire_hops": sum(len(r.movs) + 1 for r in mapping.routes),
+    }
+
+
 def register_pressure_by_pe(
     mapping: Mapping, *, num_iters: int | None = None
 ) -> dict[int, int]:

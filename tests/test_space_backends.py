@@ -1,0 +1,223 @@
+"""Pluggable space-backend subsystem (DESIGN.md §13).
+
+Covers the registry surface (name/alias/auto/instance resolution), the
+exact engine's bit-parity with the pre-refactor golden mappings, the
+annealing backend's validity on the large fabrics it exists for (independent
+``Mapping.validate`` + cycle-accurate execution), its determinism contract,
+and the cache-key separation between engines (memory, disk, and the
+CACHE_VERSION bump orphaning pre-split entries).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import pytest
+
+from repro.core import CGRA, map_dfg
+from repro.core.benchsuite import load_suite
+from repro.core.mapper import _cache_base_key, clear_mapping_cache
+from repro.core.service.cache import CACHE_VERSION, DiskMappingCache
+from repro.core.simulate import check_equivalence, utilization_report
+from repro.core.space_backends import (
+    AUTO_EXACT_MAX_PES,
+    AnnealSpaceBackend,
+    ExactSpaceBackend,
+    SpaceBudget,
+    available_space_backends,
+    create_space_backend,
+    resolve_space_backend,
+    resolve_space_backend_name,
+)
+
+_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data_golden_4x4.json")
+
+
+def _sha(mapping) -> str:
+    return hashlib.sha1(json.dumps(
+        {"t_abs": mapping.t_abs, "placement": mapping.placement},
+        separators=(",", ":")).encode()).hexdigest()
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_lists_both_engines():
+    avail = available_space_backends()
+    assert avail.get("exact") is True and avail.get("anneal") is True
+
+
+def test_name_and_alias_resolution():
+    assert resolve_space_backend_name("exact") == "exact"
+    assert resolve_space_backend_name("anneal") == "anneal"
+    # historical/colloquial aliases canonicalise
+    assert resolve_space_backend_name("mono") == "exact"
+    assert resolve_space_backend_name("bitset") == "exact"
+    assert resolve_space_backend_name("sa") == "anneal"
+    assert resolve_space_backend_name("cluster") == "anneal"
+
+
+def test_unknown_name_raises():
+    with pytest.raises(ValueError, match="unknown space backend"):
+        resolve_space_backend_name("simplex")
+    with pytest.raises(ValueError, match="unknown space backend"):
+        create_space_backend("simplex")
+
+
+def test_auto_resolution_is_fabric_sized():
+    with pytest.raises(ValueError, match="needs the target CGRA"):
+        resolve_space_backend_name("auto")
+    assert resolve_space_backend_name("auto", CGRA(4, 4)) == "exact"
+    # 20x20 = 400 PEs sits exactly on the threshold (still exact)
+    assert CGRA(20, 20).num_pes == AUTO_EXACT_MAX_PES
+    assert resolve_space_backend_name("auto", CGRA(20, 20)) == "exact"
+    assert resolve_space_backend_name("auto", CGRA(21, 21)) == "anneal"
+    assert resolve_space_backend_name("auto", CGRA(100, 100)) == "anneal"
+
+
+def test_instance_passthrough_and_type_errors():
+    eng = ExactSpaceBackend()
+    assert resolve_space_backend(eng) is eng
+    anneal = AnnealSpaceBackend()
+    assert resolve_space_backend(anneal) is anneal
+    assert resolve_space_backend("exact").name == "exact"
+    with pytest.raises(TypeError, match="place"):
+        resolve_space_backend(42)
+
+
+def test_mapper_rejects_unknown_backend():
+    dfg = load_suite(names=["bitcount"])["bitcount"]
+    with pytest.raises(ValueError, match="space.backend"):
+        map_dfg(dfg, CGRA(4, 4), space_backend="simplex")
+
+
+# --------------------------------------------------------- exact bit-parity
+
+@pytest.mark.parametrize("name", ["bitcount", "gsm", "susan"])
+def test_explicit_exact_matches_golden(name):
+    """``space_backend="exact"`` is the refactored-but-identical engine: the
+    deterministic 4×4 mappings must still match the pre-split golden hashes
+    bit for bit (the full-suite default-path gate lives in test_api.py)."""
+    with open(_GOLDEN_PATH) as f:
+        golden = json.load(f)
+    dfg = load_suite(names=[name])[name]
+    res = map_dfg(dfg, CGRA(4, 4), deterministic=True, use_cache=False,
+                  space_backend="exact")
+    assert res.ok, res.reason
+    assert res.mapping.ii == golden[name]["ii"]
+    assert _sha(res.mapping) == golden[name]["sha1"]
+    assert res.stats.space_backend == "exact"
+
+
+# --------------------------------------------------------- anneal validity
+
+@pytest.mark.parametrize("size", [20, 50])
+def test_anneal_maps_midsize_kernel_validated_and_executed(size):
+    """The annealing backend's acceptance contract: a mid-size suite kernel
+    maps on 20×20 and 50×50, passes the independent structural validator,
+    and executes bit-identically to the reference interpreter."""
+    dfg = load_suite(names=["backprop"])["backprop"]
+    res = map_dfg(dfg, CGRA(size, size), space_backend="anneal",
+                  use_cache=False, seed=1)
+    assert res.ok, res.reason
+    assert res.stats.space_backend == "anneal"
+    assert res.mapping.validate() == []
+    check_equivalence(res.mapping)
+    u = utilization_report(res.mapping)
+    assert u["num_pes"] == size * size
+    assert u["slots_used"] == dfg.num_nodes
+    assert 0 < u["occupancy"] < 1
+
+
+def test_anneal_place_is_deterministic_under_node_budget():
+    """Same inputs + same seed + node budget (no wall clock) -> the same
+    placement, the deterministic contract ``SpaceBudget`` documents."""
+    dfg = load_suite(names=["backprop"])["backprop"]
+    cgra = CGRA(50, 50)
+    res = map_dfg(dfg, cgra, deterministic=True, use_cache=False,
+                  space_backend="anneal", seed=3)
+    res2 = map_dfg(dfg, cgra, deterministic=True, use_cache=False,
+                   space_backend="anneal", seed=3)
+    assert res.ok and res2.ok
+    assert res.mapping.ii == res2.mapping.ii
+    assert _sha(res.mapping) == _sha(res2.mapping)
+
+
+def test_auto_uses_anneal_on_large_fabric():
+    dfg = load_suite(names=["backprop"])["backprop"]
+    res = map_dfg(dfg, CGRA(50, 50), use_cache=False)
+    assert res.ok, res.reason
+    assert res.stats.space_backend == "anneal"
+    assert res.mapping.validate() == []
+
+
+# ------------------------------------------------------- cache separation
+
+def test_cache_key_separates_backends():
+    dfg = load_suite(names=["bitcount"])["bitcount"]
+    cgra = CGRA(4, 4)
+    k_exact = _cache_base_key(dfg, cgra, "strict", None, 0, "exact")
+    k_anneal = _cache_base_key(dfg, cgra, "strict", None, 0, "anneal")
+    assert k_exact != k_anneal
+    # legacy positional callers mean the exact engine
+    assert _cache_base_key(dfg, cgra, "strict", None) == k_exact
+
+
+def test_memory_cache_never_serves_across_backends():
+    clear_mapping_cache()
+    dfg = load_suite(names=["bitcount"])["bitcount"]
+    cgra = CGRA(4, 4)
+    first = map_dfg(dfg, cgra, space_backend="exact")
+    assert first.ok and not first.stats.cache_hit
+    # same problem, other engine: must solve, not hit exact's entry
+    cross = map_dfg(dfg, cgra, space_backend="anneal")
+    assert cross.ok and not cross.stats.cache_hit
+    assert cross.stats.space_backend == "anneal"
+    # same engine again: now it hits, and provenance stays truthful
+    again = map_dfg(dfg, cgra, space_backend="exact")
+    assert again.ok and again.stats.cache_hit
+    assert again.stats.space_backend == "exact"
+
+
+def test_disk_cache_rejects_poisoned_anneal_entry(tmp_path):
+    """A schema-valid but structurally invalid disk entry under the anneal
+    key is dropped (re-validation + invalidate), never served."""
+    clear_mapping_cache()
+    dfg = load_suite(names=["bitcount"])["bitcount"]
+    cgra = CGRA(4, 4)
+    base_key = _cache_base_key(dfg, cgra, "strict", None, 0, "anneal")
+    store = DiskMappingCache(str(tmp_path))
+    n = dfg.num_nodes
+    # every node on PE 0 at time 0: guaranteed mono1 slot conflicts
+    store.put(base_key, 1, [0] * n, [0] * n)
+    res = map_dfg(dfg, cgra, space_backend="anneal", cache_dir=str(tmp_path))
+    assert res.ok, res.reason
+    assert not res.stats.disk_cache_hit
+    assert res.mapping.validate() == []
+
+
+def test_cache_version_bump_orphans_pre_split_entries(tmp_path, monkeypatch):
+    """v4 keys carry the backend token; v3-era entries (written before the
+    key schema grew it) must stop matching entirely."""
+    assert CACHE_VERSION >= 4
+    import repro.core.service.cache as cache_mod
+
+    store = DiskMappingCache(str(tmp_path))
+    key = store.entry_key("abc", 4, 4, "mesh", "strict", None,
+                          space_backend="anneal")
+    monkeypatch.setattr(cache_mod, "CACHE_VERSION", CACHE_VERSION - 1)
+    store.put(key, 2, [0, 1], [0, 1])
+    monkeypatch.setattr(cache_mod, "CACHE_VERSION", CACHE_VERSION)
+    assert store.get(key, 1, 4) is None
+    assert store.prune() == 1
+
+
+def test_entry_key_mirrors_mapper_key_with_backend():
+    dfg = load_suite(names=["bitcount"])["bitcount"]
+    cgra = CGRA(4, 4)
+    mapper_key = _cache_base_key(dfg, cgra, "strict", None, 0, "anneal")
+    store_key = DiskMappingCache.entry_key(
+        dfg.stable_hash(), 4, 4, "mesh", "strict", None, None,
+        cgra.pressure_token(None), 0, "anneal")
+    assert mapper_key == store_key
