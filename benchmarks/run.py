@@ -64,10 +64,15 @@ def main(argv=None) -> None:
     csv_rows: list[tuple[str, float, str]] = []
 
     if args.only in (None, "table3"):
-        kw = dict(options=options, run_joint=not args.skip_joint)
+        # exact-check on: every row carries ii_opt + a machine-checkable
+        # optimality certificate (DESIGN.md §14), which tools/
+        # check_certificates.py re-verifies and CI gates regressions on.
+        # The quick subset pivots on the 4x4 paper grid (the acceptance
+        # fabric) with the full 17-kernel suite.
+        kw = dict(options=options.replace(exact_check=True),
+                  run_joint=not args.skip_joint)
         if args.quick:
-            kw.update(sizes=(2, 5), ours_budget_s=20, joint_budget_s=20,
-                      benchmarks=["bitcount", "fft", "gsm", "susan", "aes"])
+            kw.update(sizes=(2, 4), ours_budget_s=20, joint_budget_s=20)
         else:
             kw.update(ours_budget_s=60, joint_budget_s=60)
         rows = bench_table3.run(**kw)
@@ -107,7 +112,7 @@ def main(argv=None) -> None:
             )
 
     if args.only in (None, "hetero"):
-        kw = dict(arch=hetero_arch, options=options)
+        kw = dict(arch=hetero_arch, options=options.replace(exact_check=True))
         if args.quick:
             kw.update(budget_s=20,
                       benchmarks=["bitcount", "fft", "gsm", "susan", "aes"])

@@ -127,6 +127,48 @@ class Compiler:
         opts.validate()
         return opts
 
+    # --------------------------------------------------------- certification
+    def _certify(self, dfg: DFG, result: CompileResult,
+                 opts: CompileOptions) -> None:
+        """Exact-check post-pass (DESIGN.md §14.4): attach a certificate to
+        a successful result, adopting the joint backend's mapping when it
+        strictly beats the portfolio's II.
+
+        Adopted mappings are written into both mapping-cache layers under
+        the portfolio's own key, so the next compile of this kernel serves
+        the certified-optimal II instead of re-discovering it (skipped in
+        deterministic mode, where the mapper bypasses caches entirely).
+        """
+        if not result.ok or result.mapping is None:
+            return
+        from ..core.exact_backends import certify_mapping
+        from ..core.mapper import cache_store_mapping
+
+        cert, better = certify_mapping(
+            dfg, self.cgra, result.mapping,
+            connectivity=opts.connectivity,
+            max_route_hops=opts.max_route_hops,
+            max_register_pressure=opts.max_register_pressure,
+            budget_s=opts.exact_budget_s,
+            deterministic=opts.deterministic,
+        )
+        if better is not None:
+            result.mapping = better
+            result.ii = better.ii
+            result.route_movs = better.num_route_movs
+            result.space_backend = "joint"
+            if opts.use_cache and not opts.deterministic:
+                cache_store_mapping(
+                    dfg, self.cgra, better,
+                    connectivity=opts.connectivity,
+                    max_register_pressure=opts.max_register_pressure,
+                    max_route_hops=opts.max_route_hops,
+                    space_backend=opts.space_backend,
+                    cache_dir=opts.cache_dir,
+                )
+        result.ii_opt = cert.ii_opt
+        result.certificate = cert.as_dict()
+
     # --------------------------------------------------------------- compile
     def compile(
         self,
@@ -145,7 +187,10 @@ class Compiler:
         res = _map_dfg_impl(
             dfg, self.cgra, should_stop=should_stop, **opts.mapper_kwargs()
         )
-        return CompileResult.from_map_result(res, name=dfg.name)
+        result = CompileResult.from_map_result(res, name=dfg.name)
+        if opts.exact_check:
+            self._certify(dfg, result, opts)
+        return result
 
     def compile_batch(
         self,
@@ -186,6 +231,12 @@ class Compiler:
             report, pairs=[(job.dfg, job.cgra) for job in batch],
             max_register_pressure=opts.max_register_pressure,
         )
+        if opts.exact_check:
+            # certification is a caller-side post-pass (sequential, in
+            # process): worker rows stay lean and the sweep sees the exact
+            # reconstructed mapping every row was re-validated with
+            for job, row in zip(batch, result.results):
+                self._certify(job.dfg, row, opts)
         result.wall_s = _time.perf_counter() - t0
         return result
 

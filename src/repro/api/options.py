@@ -123,6 +123,9 @@ class CompileOptions:
     jobs: int | None = None             # batch workers (None = os.cpu_count())
     deadline_s: float | None = None     # per-job wall budget in compile_batch
     racing_workers: int = 1             # compile_racing default worker count
+    # ------------------------------------------------- exact certification
+    exact_check: bool = False           # certify/improve each result (§14)
+    exact_budget_s: float = 20.0        # wall budget per certification sweep
     # ----------------------------------------------------------- target
     arch: str | None = None             # preset name or ArchSpec JSON path
     # -------------------------------------------------------- provenance
@@ -176,6 +179,8 @@ class CompileOptions:
             raise ValueError("deadline_s must be > 0 (or None)")
         if self.racing_workers < 1:
             raise ValueError("racing_workers must be >= 1")
+        if self.exact_budget_s <= 0:
+            raise ValueError("exact_budget_s must be > 0")
         if self.profile is not None and self.profile not in PROFILES:
             raise ValueError(
                 f"unknown profile {self.profile!r} "
@@ -247,7 +252,8 @@ class CompileOptions:
 #: defaults; ``fast`` trades II quality for latency (interactive / premap
 #: warm-up); ``quality`` spends a long budget polishing toward mII;
 #: ``deterministic-ci`` is the load-independent reproducible mode CI runs
-#: (step budgets, no caches, sequential batch).
+#: (step budgets, no caches, sequential batch); ``certify`` is ``default``
+#: plus the exact joint optimality sweep on every result (DESIGN.md §14).
 PROFILES: dict[str, CompileOptions] = {
     "default": CompileOptions(profile="default"),
     "fast": CompileOptions(
@@ -269,6 +275,10 @@ PROFILES: dict[str, CompileOptions] = {
         use_cache=False,
         backend="cp",
         jobs=1,
+    ),
+    "certify": CompileOptions(
+        profile="certify",
+        exact_check=True,
     ),
 }
 
@@ -316,6 +326,8 @@ _CLI_FIELDS = (
     "jobs",
     "deadline_s",
     "arch",
+    "exact_check",
+    "exact_budget_s",
 )
 
 
@@ -368,6 +380,14 @@ def add_cli_args(parser: argparse.ArgumentParser) -> None:
     g.add_argument("--arch", metavar="PRESET|FILE.json", default=None,
                    help="architecture spec: a named preset "
                         "(repro.core.arch.presets) or an ArchSpec JSON file")
+    g.add_argument("--exact-check", action="store_true", default=None,
+                   dest="exact_check",
+                   help="run the exact joint backend after each compile: "
+                        "prove the II optimal or adopt a strictly better "
+                        "mapping, and attach the certificate (DESIGN.md §14)")
+    g.add_argument("--exact-budget-s", type=float, default=None,
+                   dest="exact_budget_s",
+                   help="wall budget per certification sweep (default 20)")
 
 
 def options_from_args(args: argparse.Namespace) -> CompileOptions:

@@ -162,6 +162,11 @@ class CompileResult:
     route_movs: int = 0
     #: optional ``simulate.utilization_report`` block (opt-in, see compile CLI)
     utilization: dict | None = None
+    #: certified optimal II (exact-check runs; None = not proven / not run)
+    ii_opt: int | None = None
+    #: optimality certificate dict (``exact_backends.Certificate.as_dict``,
+    #: DESIGN.md §14) — present only when the compile ran with exact_check
+    certificate: dict | None = None
     mapping: "Mapping | None" = None
 
     # ------------------------------------------------------------ constructors
@@ -321,6 +326,11 @@ class CompileResult:
         }
         if self.utilization is not None:
             row["utilization"] = self.utilization
+        if self.certificate is not None:
+            # exact-check rows (DESIGN.md §14.4): the certified-optimal II
+            # (None while status is "timeout") next to the full certificate
+            row["ii_opt"] = self.ii_opt
+            row["certificate"] = self.certificate
         return row
 
 

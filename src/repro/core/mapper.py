@@ -278,6 +278,44 @@ def _cache_drop(base_key: tuple, ii: int) -> None:
     _MAP_CACHE.pop((*base_key, ii), None)
 
 
+def cache_store_mapping(
+    dfg: DFG,
+    cgra: CGRA,
+    mapping: Mapping,
+    *,
+    connectivity: str = "strict",
+    max_register_pressure: int | None = None,
+    max_route_hops: int = 0,
+    space_backend: str = "auto",
+    cache_dir: str | None = None,
+) -> None:
+    """Insert an externally produced valid mapping into both cache layers.
+
+    The adoption path of the exact certification sweep (DESIGN.md §14.4): a
+    ``better-found`` mapping comes from the joint backend, not from the
+    portfolio, yet future compiles under the *same* option key must be able
+    to serve it. The key mirrors ``_map_dfg_impl``'s lookup exactly —
+    ``space_backend`` is resolved the same way, so ``"auto"`` callers hit
+    what ``"auto"`` stores. The caller vouches for validity (``Compiler``
+    only adopts mappings that passed ``Mapping.validate``); both layers
+    re-validate on every read anyway.
+    """
+    resolved = resolve_space_backend_name(space_backend, cgra)
+    base_key = _cache_base_key(
+        dfg, cgra, connectivity, max_register_pressure, max_route_hops,
+        resolved,
+    )
+    _cache_put(base_key, mapping)
+    from .service.cache import DiskMappingCache, resolve_cache_dir
+
+    root = resolve_cache_dir(cache_dir)
+    if root is not None:
+        DiskMappingCache(root).put(
+            base_key, mapping.ii, mapping.t_abs, mapping.placement,
+            routes=mapping.routes_spec(),
+        )
+
+
 def _pressure_offenders(mapping: Mapping, max_rp: int) -> list[int]:
     """PEs whose steady-state pressure exceeds their *effective* bound.
 

@@ -42,7 +42,12 @@ from dataclasses import dataclass, field
 # v4: base key grew the resolved space-backend name (DESIGN.md §13.4) —
 # exact and anneal placements are both valid but must never be served
 # across engines, or backend provenance and benchmarks would lie.
-CACHE_VERSION = 4
+# v5: the exact-check post-pass (DESIGN.md §14.4) now writes joint-backend
+# mappings under the portfolio's own key when they strictly beat the
+# portfolio II. The payload schema is unchanged, but pre-v5 entries may
+# hold a provably suboptimal II for keys the adoption path would now
+# overwrite; orphaning them lets certified results win deterministically.
+CACHE_VERSION = 5
 
 _ENTRY_SUFFIX = ".json"
 

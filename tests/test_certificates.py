@@ -1,0 +1,241 @@
+"""Exact joint backend + certificate machinery (DESIGN.md §14).
+
+Covers the joint solver's three verdicts (structural unsat, sat-with-witness,
+budget unknown), the certificate life-cycle (free bound proof, refutation
+sweep, better-found adoption, timeout), the independent verifier's rejection
+of corrupted certificates — corruption must target something load-bearing:
+a slack node's ``t_abs`` can legitimately move, so the fixtures break the
+claimed II, the probe coverage, and the mapping payload instead — and the
+``tools/check_certificates.py`` CLI including its regression gate.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+from repro.api import Compiler, resolve_options
+from repro.core import CGRA, map_dfg, running_example
+from repro.core.benchsuite import load_suite
+from repro.core.exact_backends import (
+    CERTIFICATE_VERSION,
+    Certificate,
+    certify_mapping,
+    solve_joint,
+    verify_certificate,
+)
+from repro.core.exact_backends.joint import grid_automorphisms
+from repro.core.simulate import check_equivalence
+
+_TOOL = os.path.join(os.path.dirname(__file__), os.pardir, "tools",
+                     "check_certificates.py")
+
+
+def _tool_main():
+    spec = importlib.util.spec_from_file_location("check_certificates", _TOOL)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.main
+
+
+def _bitcount_cert():
+    """A real end-to-end certificate: bitcount on the paper 4x4 grid."""
+    suite = load_suite()
+    dfg = suite["bitcount"]
+    cgra = CGRA(4, 4)
+    res = map_dfg(dfg, cgra, deterministic=True, use_cache=False)
+    assert res.ok
+    cert, better = certify_mapping(dfg, cgra, res.mapping, deterministic=True)
+    assert better is None
+    return dfg, cgra, cert
+
+
+# ------------------------------------------------------------------- joint
+
+def test_joint_structural_unsat_is_free():
+    """II below capacity feasibility is refuted without any search."""
+    dfg = running_example()                      # 14 nodes
+    out = solve_joint(dfg, CGRA(2, 2), 3)        # 4 PEs x 3 slots < 14
+    assert out.status == "unsat"
+    assert out.nodes_visited == 0
+
+
+def test_joint_sat_witness_is_a_real_mapping():
+    dfg = running_example()
+    out = solve_joint(dfg, CGRA(2, 2), 4)
+    assert out.status == "sat"
+    assert out.mapping is not None and out.mapping.ii == 4
+    assert out.mapping.validate() == []
+    check_equivalence(out.mapping)
+
+
+def test_joint_unknown_on_starved_budget():
+    dfg = load_suite()["sha1"]                   # needs ~28k nodes at II=2
+    out = solve_joint(dfg, CGRA(4, 4), 2, node_budget=50)
+    assert out.status == "unknown"
+    assert out.mapping is None
+
+
+def test_grid_automorphisms_counts():
+    # dihedral group of the square mesh; rectangular mesh keeps only the
+    # symmetries that preserve the aspect ratio
+    assert len(grid_automorphisms(CGRA(4, 4))) == 8
+    assert len(grid_automorphisms(CGRA(3, 4))) == 4
+    # torus adds the translations: 8 x 16 for the 4x4
+    assert len(grid_automorphisms(CGRA(4, 4, topology="torus"))) == 128
+
+
+# ----------------------------------------------------------------- certify
+
+def test_certify_free_bound_proof():
+    dfg, cgra, cert = _bitcount_cert()
+    assert cert.status == "optimal"
+    assert cert.ii_opt == cert.ii == cert.m_ii
+    assert cert.probes[0]["outcome"] == "bound"
+    assert verify_certificate(cert, dfg, cgra) == []
+    # and it round-trips through JSON exactly
+    wire = json.loads(json.dumps(cert.as_dict()))
+    assert verify_certificate(Certificate.from_dict(wire), dfg, cgra) == []
+
+
+@pytest.mark.slow
+def test_certify_refutation_sweep_proves_optimal():
+    """sha1's II=3 is optimal: the joint model refutes II=2 by search."""
+    dfg = load_suite()["sha1"]
+    cgra = CGRA(4, 4)
+    res = map_dfg(dfg, cgra, deterministic=True, use_cache=False)
+    assert res.ok and res.mapping.ii == 3
+    cert, better = certify_mapping(dfg, cgra, res.mapping, deterministic=True)
+    assert better is None
+    assert cert.status == "optimal" and cert.ii_opt == 3
+    assert any(p["outcome"] == "unsat" and p["ii"] == 2 for p in cert.probes)
+    assert verify_certificate(cert, dfg, cgra) == []
+
+
+def test_certify_better_found_adopts_valid_mapping():
+    """A deliberately suboptimal (but valid) mapping gets strictly beaten:
+    the joint backend finds II=4 on the 2x2 running example and proves it
+    optimal, and the certificate adopts the improved mapping."""
+    dfg = running_example()
+    cgra = CGRA(2, 2)
+    worse = solve_joint(dfg, cgra, 5)            # valid witness at II=5
+    assert worse.status == "sat" and worse.mapping is not None
+    cert, better = certify_mapping(
+        dfg, cgra, worse.mapping, deterministic=True
+    )
+    assert cert.status == "better-found"
+    assert better is not None and better.ii == cert.ii_opt == 4
+    assert cert.ii_portfolio == 5
+    assert better.validate() == []
+    check_equivalence(better)
+    assert verify_certificate(cert, dfg, cgra) == []
+
+
+def test_certify_timeout_keeps_partial_lower_bound():
+    dfg = load_suite()["susan"]
+    cgra = CGRA(4, 4)
+    res = map_dfg(dfg, cgra, deterministic=True, use_cache=False)
+    assert res.ok
+    cert, better = certify_mapping(
+        dfg, cgra, res.mapping, node_budget=50, deterministic=True
+    )
+    assert cert.status == "timeout"
+    assert better is None and cert.ii_opt is None
+    assert cert.m_ii <= cert.ii_lower_bound <= cert.ii
+    # a timeout certificate is still a consistent, verifiable document
+    assert verify_certificate(cert, dfg, cgra) == []
+
+
+def test_certificate_from_dict_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown Certificate keys"):
+        Certificate.from_dict({"kernel": "x", "bogus": 1})
+
+
+# ---------------------------------------------------------------- verifier
+
+def test_verifier_catches_corrupted_certificates():
+    dfg, cgra, cert = _bitcount_cert()
+    base = cert.as_dict()
+
+    # (a) inflated lower bound with no probes backing it
+    c = json.loads(json.dumps(base))
+    c["ii_lower_bound"] += 1
+    c["ii"] += 1
+    c["ii_opt"] += 1
+    c["mapping"]["ii"] += 1
+    assert any("not covered" in p or "bound" in p
+               for p in verify_certificate(c, dfg, cgra))
+
+    # (b) optimality claim below the recomputable mII
+    c = json.loads(json.dumps(base))
+    c["m_ii"] -= 1
+    c["res_ii"] -= 1
+    assert any("bound mismatch" in p for p in verify_certificate(c, dfg, cgra))
+
+    # (c) mapping payload with a placement collision
+    c = json.loads(json.dumps(base))
+    lab = [t % c["mapping"]["ii"] for t in c["mapping"]["t_abs"]]
+    v = next(u for u in range(1, len(lab)) if lab[u] == lab[0])
+    c["mapping"]["placement"][v] = c["mapping"]["placement"][0]
+    assert any("mapping" in p for p in verify_certificate(c, dfg, cgra))
+
+    # (d) certificate for a different kernel
+    other = load_suite()["gsm"]
+    assert any("hash mismatch" in p for p in verify_certificate(base, other, cgra))
+
+    # (e) unsupported schema version
+    c = json.loads(json.dumps(base))
+    c["version"] = CERTIFICATE_VERSION + 1
+    assert any("version" in p for p in verify_certificate(c, dfg, cgra))
+
+
+# --------------------------------------------------------------------- CLI
+
+def test_check_certificates_cli_roundtrip(tmp_path):
+    main = _tool_main()
+    dfg, cgra, cert = _bitcount_cert()
+    row = {"name": "bitcount", "size": 4, "ok": True,
+           "ii": cert.ii, "ii_opt": cert.ii_opt,
+           "certificate": cert.as_dict()}
+    good = tmp_path / "bench.json"
+    good.write_text(json.dumps({"rows": [row]}))
+    assert main([str(good)]) == 0
+    assert main([str(good), "--min-certified", "1", "--at-size", "4"]) == 0
+    assert main([str(good), "--min-certified", "2", "--at-size", "4"]) == 1
+
+    # corrupted artifact: the embedded claim no longer matches the row
+    bad_row = json.loads(json.dumps(row))
+    bad_row["ii"] = bad_row["certificate"]["ii"] - 1
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"rows": [bad_row]}))
+    assert main([str(bad)]) == 1
+
+    # regression gate: a fresh row doing worse than the recorded optimum
+    worse = json.loads(json.dumps(row))
+    worse["ii"] = row["ii"] + 1
+    del worse["certificate"]
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps({"rows": [worse]}))
+    assert main([str(fresh), "--baseline", str(good)]) == 1
+    # and a non-regressing fresh row passes
+    same = json.loads(json.dumps(row))
+    del same["certificate"]
+    fresh.write_text(json.dumps({"rows": [same]}))
+    assert main([str(fresh), "--baseline", str(good)]) == 0
+
+
+def test_compiler_certify_profile_threads_through():
+    """`certify` profile: rows gain ii_opt/certificate; plain rows do not."""
+    comp = Compiler(CGRA(4, 4), resolve_options("certify"),
+                    use_cache=False, deterministic=True)
+    res = comp.compile(load_suite()["bitcount"])
+    row = res.as_dict()
+    assert row["ii_opt"] == row["ii"]
+    assert row["certificate"]["status"] == "optimal"
+    plain = Compiler(CGRA(4, 4), resolve_options("deterministic-ci"),
+                     use_cache=False).compile(load_suite()["bitcount"])
+    prow = plain.as_dict()
+    assert "ii_opt" not in prow and "certificate" not in prow

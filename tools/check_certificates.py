@@ -1,0 +1,181 @@
+#!/usr/bin/env python
+"""Re-verify the optimality certificates embedded in BENCH_*.json artifacts.
+
+Certificates (DESIGN.md §14) are claims, not facts: this tool is the
+independent checker that makes them trustworthy. For every bench row that
+carries a ``certificate`` it rebuilds the kernel and target from the row's
+own identifiers (never from the certificate — the certificate is what is
+being audited), then runs :func:`repro.core.exact_backends.verify_certificate`,
+which recomputes the res/rec/mII bound, re-walks the probe coverage,
+re-validates the embedded mapping, and re-executes it cycle-accurately.
+
+Two gate modes ride on top (both used by CI):
+
+* ``--baseline OLD.json`` — regression gate: any fresh row whose kernel has
+  a recorded ``optimal`` certificate in the baseline must achieve an II no
+  worse than that certified optimum. A regression means the portfolio lost
+  ground it had *proven* reachable, which is always a bug, never noise.
+* ``--min-certified N --at-size S`` — acceptance floor: at least N rows at
+  fabric size S must carry a decided (non-timeout) certificate.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_certificates.py BENCH_table3.json \
+        BENCH_hetero.json [--baseline OLD.json] [--min-certified 12 --at-size 4]
+
+Exit status 0 = every certificate verified and every gate held.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load_rows(path: str) -> list[dict]:
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    rows = doc["rows"] if isinstance(doc, dict) else doc
+    if not isinstance(rows, list):
+        raise SystemExit(f"{path}: no row list found")
+    return rows
+
+
+def _kernel_for(row: dict):
+    """The DFG a row compiled, rebuilt from the row's own name."""
+    from repro.core.benchsuite import load_suite, route_stress_dfg
+
+    name = row.get("name")
+    if name == "route_stress":
+        return route_stress_dfg()
+    suite = load_suite()
+    if name not in suite:
+        raise KeyError(f"unknown bench kernel {name!r}")
+    return suite[name]
+
+
+def _cgra_for(row: dict):
+    """The target machine, from ``size`` (homogeneous) or ``arch`` (preset)."""
+    from repro.core.arch import resolve_arch
+    from repro.core.cgra import CGRA
+
+    if "arch" in row:
+        return resolve_arch(row["arch"]).cgra()
+    size = int(row["size"])
+    return CGRA(size, size)
+
+
+def _row_key(row: dict) -> tuple:
+    return (row.get("name"), row.get("size"), row.get("arch"))
+
+
+def check_rows(rows: list[dict], label: str, *, execute: bool = True) -> list[str]:
+    """Verify every certificate-bearing row; returns human-readable failures."""
+    from repro.core.exact_backends import verify_certificate
+
+    failures: list[str] = []
+    checked = 0
+    for row in rows:
+        cert = row.get("certificate")
+        if cert is None:
+            continue
+        checked += 1
+        tag = f"{label}:{row.get('name')}@{row.get('arch') or row.get('size')}"
+        try:
+            dfg = _kernel_for(row)
+            cgra = _cgra_for(row)
+        except Exception as exc:
+            failures.append(f"{tag}: cannot rebuild problem: {exc}")
+            continue
+        problems = verify_certificate(cert, dfg, cgra, check_execution=execute)
+        failures.extend(f"{tag}: {p}" for p in problems)
+        # the row's headline columns must agree with the audited certificate
+        if row.get("ii") != cert.get("ii"):
+            failures.append(
+                f"{tag}: row ii={row.get('ii')} != certificate ii={cert.get('ii')}"
+            )
+        if row.get("ii_opt") != cert.get("ii_opt"):
+            failures.append(
+                f"{tag}: row ii_opt={row.get('ii_opt')} != certificate "
+                f"ii_opt={cert.get('ii_opt')}"
+            )
+    print(f"{label}: {checked} certificate(s) checked, "
+          f"{len(failures)} problem(s)")
+    return failures
+
+
+def gate_regressions(fresh: list[dict], baseline: list[dict]) -> list[str]:
+    """Fresh rows may never do worse than a baseline-certified optimum."""
+    failures: list[str] = []
+    certified = {
+        _row_key(r): r["certificate"]
+        for r in baseline
+        if r.get("certificate", {}) and r["certificate"].get("status") == "optimal"
+    }
+    compared = 0
+    for row in fresh:
+        cert = certified.get(_row_key(row))
+        if cert is None or row.get("ii") is None:
+            continue
+        compared += 1
+        if row["ii"] > cert["ii_opt"]:
+            failures.append(
+                f"regression: {row.get('name')}@"
+                f"{row.get('arch') or row.get('size')} achieved II={row['ii']} "
+                f"but II={cert['ii_opt']} is certified optimal in the baseline"
+            )
+    print(f"regression gate: {compared} row(s) compared against recorded "
+          f"optimal certificates, {len(failures)} regression(s)")
+    return failures
+
+
+def gate_floor(rows: list[dict], min_certified: int, at_size: int | None) -> list[str]:
+    decided = [
+        r for r in rows
+        if (at_size is None or r.get("size") == at_size)
+        and (r.get("certificate") or {}).get("status") in ("optimal", "better-found")
+    ]
+    where = f" at size {at_size}" if at_size is not None else ""
+    print(f"certified floor: {len(decided)} decided certificate(s){where} "
+          f"(need >= {min_certified})")
+    if len(decided) < min_certified:
+        return [
+            f"only {len(decided)} rows{where} carry a decided certificate, "
+            f"required {min_certified}"
+        ]
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifacts", nargs="+", help="BENCH_*.json files to audit")
+    ap.add_argument("--baseline", help="prior artifact for the regression gate")
+    ap.add_argument("--min-certified", type=int, default=None,
+                    help="require at least N decided certificates")
+    ap.add_argument("--at-size", type=int, default=None,
+                    help="restrict --min-certified to rows of this fabric size")
+    ap.add_argument("--no-execute", action="store_true",
+                    help="skip cycle-accurate re-execution (bounds/probes only)")
+    args = ap.parse_args(argv)
+
+    failures: list[str] = []
+    all_rows: list[dict] = []
+    for path in args.artifacts:
+        rows = _load_rows(path)
+        all_rows.extend(rows)
+        failures.extend(check_rows(rows, path, execute=not args.no_execute))
+    if args.baseline:
+        failures.extend(gate_regressions(all_rows, _load_rows(args.baseline)))
+    if args.min_certified is not None:
+        failures.extend(gate_floor(all_rows, args.min_certified, args.at_size))
+
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    if not failures:
+        print("all certificates verified")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
