@@ -49,6 +49,15 @@ def main(argv=None) -> None:
         args.quick = True
         args.skip_joint = True
     options = options_from_args(args)
+    from repro import obs
+
+    # structured tracing (DESIGN.md §15): --trace records every section's
+    # compile spans into one Perfetto-loadable trace file
+    with obs.session(getattr(args, "trace_out", None), enable=options.trace):
+        _run_sections(args, options)
+
+
+def _run_sections(args, options) -> None:
     # the hetero section needs a heterogeneous target even when the shared
     # --arch flag is unset; table3/fig5 build their own homogeneous grids
     hetero_arch = options.arch or "satmapit_edge_mem_4x4"

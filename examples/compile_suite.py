@@ -16,6 +16,7 @@ the same ``resolve_options`` path as every other CLI.
 
 import argparse
 
+from repro import obs
 from repro.api import Compiler, add_cli_args, options_from_args
 from repro.core import CGRA
 from repro.core.benchsuite import load_suite
@@ -41,7 +42,10 @@ jobs = options.jobs if options.jobs is not None else "auto"
 print(f"=== {target} CGRA, 17 benchmarks, jobs={jobs} ===")
 
 dfgs = list(suite.values())
-batch = compiler.compile_batch(dfgs)
+# --trace OUT.json records every job's spans — pool workers shard per pid,
+# merged into one Perfetto-loadable timeline (DESIGN.md §15.2)
+with obs.session(getattr(args, "trace_out", None), enable=options.trace):
+    batch = compiler.compile_batch(dfgs)
 
 for dfg, r in zip(dfgs, batch):
     if not r.ok:

@@ -17,6 +17,7 @@ import argparse
 
 import numpy as np
 
+from repro import obs
 from repro.api import Compiler, add_cli_args, options_from_args
 from repro.core import CGRA, running_example
 from repro.core.simulate import check_equivalence
@@ -32,7 +33,9 @@ dfg = running_example()
 compiler = Compiler(CGRA(2, 2), options)
 
 # 2. decoupled mapping: SMT time solution -> monomorphism space solution
-result = compiler.compile(dfg)
+# (--trace OUT.json records the compile's span tree, DESIGN.md §15)
+with obs.session(getattr(args, "trace_out", None), enable=options.trace):
+    result = compiler.compile(dfg)
 assert result.ok, result.reason
 m = result.mapping
 print(m.pretty())

@@ -11,9 +11,12 @@ return the unified :class:`~repro.api.result.CompileResult` schema.
 
 from __future__ import annotations
 
+import dataclasses
+import tempfile
 import time as _time
 from typing import Callable, Iterable, Sequence
 
+from .. import obs
 from ..core.arch import ArchSpec, resolve_arch
 from ..core.cgra import CGRA
 from ..core.dfg import DFG
@@ -144,14 +147,17 @@ class Compiler:
         from ..core.exact_backends import certify_mapping
         from ..core.mapper import cache_store_mapping
 
-        cert, better = certify_mapping(
-            dfg, self.cgra, result.mapping,
-            connectivity=opts.connectivity,
-            max_route_hops=opts.max_route_hops,
-            max_register_pressure=opts.max_register_pressure,
-            budget_s=opts.exact_budget_s,
-            deterministic=opts.deterministic,
-        )
+        t0 = _time.perf_counter()
+        with obs.span("certify", kernel=dfg.name, ii=result.ii) as sp:
+            cert, better = certify_mapping(
+                dfg, self.cgra, result.mapping,
+                connectivity=opts.connectivity,
+                max_route_hops=opts.max_route_hops,
+                max_register_pressure=opts.max_register_pressure,
+                budget_s=opts.exact_budget_s,
+                deterministic=opts.deterministic,
+            )
+            sp.set(ii_opt=cert.ii_opt, adopted=better is not None)
         if better is not None:
             result.mapping = better
             result.ii = better.ii
@@ -168,6 +174,17 @@ class Compiler:
                 )
         result.ii_opt = cert.ii_opt
         result.certificate = cert.as_dict()
+        # book the certification post-pass as its own phase (§14.4 / §15.3):
+        # without this, certify wall time silently inflates nothing — it was
+        # simply unaccounted — so total_s under-reported the compile
+        dt = _time.perf_counter() - t0
+        result.phases = dataclasses.replace(
+            result.phases,
+            exact_s=result.phases.exact_s + dt,
+            total_s=result.phases.total_s + dt,
+        )
+        result.wall_s += dt
+        result.metrics["phases"] = result.phases.as_dict()
 
     # --------------------------------------------------------------- compile
     def compile(
@@ -184,12 +201,15 @@ class Compiler:
         ``time_budget_s=5``) that do not mutate the session.
         """
         opts = self._opts(overrides)
-        res = _map_dfg_impl(
-            dfg, self.cgra, should_stop=should_stop, **opts.mapper_kwargs()
-        )
-        result = CompileResult.from_map_result(res, name=dfg.name)
-        if opts.exact_check:
-            self._certify(dfg, result, opts)
+        with obs.span("compile", kernel=dfg.name) as sp:
+            res = _map_dfg_impl(
+                dfg, self.cgra, should_stop=should_stop,
+                **opts.mapper_kwargs()
+            )
+            result = CompileResult.from_map_result(res, name=dfg.name)
+            if opts.exact_check:
+                self._certify(dfg, result, opts)
+            sp.set(ok=result.ok, ii=result.ii)
         return result
 
     def compile_batch(
@@ -218,15 +238,31 @@ class Compiler:
             for dfg, name in zip(dfgs, names)
         ]
         t0 = _time.perf_counter()
-        report = compile_many(
-            batch,
-            jobs=opts.jobs,
-            deterministic=opts.deterministic,
-            cache_dir=opts.cache_dir,
-            use_cache=opts.use_cache,
-            cancel=cancel,
-            map_options=opts.batch_kwargs(),
-        )
+        # cross-process span shards (DESIGN.md §15.2): pool workers append
+        # per-pid shard files into a scratch dir that we merge back into this
+        # process's tracer; the inline path (jobs<=1) records directly into
+        # the active tracer and writes no shards
+        tracer = obs.get_tracer()
+        trace_tmp = (tempfile.TemporaryDirectory(prefix="repro-spans-")
+                     if tracer is not None else None)
+        try:
+            report = compile_many(
+                batch,
+                jobs=opts.jobs,
+                deterministic=opts.deterministic,
+                cache_dir=opts.cache_dir,
+                use_cache=opts.use_cache,
+                cancel=cancel,
+                map_options=opts.batch_kwargs(),
+                trace_dir=trace_tmp.name if trace_tmp is not None else None,
+            )
+        finally:
+            if trace_tmp is not None:
+                events, counters = obs.merge_shards(trace_tmp.name)
+                tracer.adopt(events)
+                for key, n in counters.items():
+                    tracer.counters[key] = tracer.counters.get(key, 0) + n
+                trace_tmp.cleanup()
         result = BatchResult.from_report(
             report, pairs=[(job.dfg, job.cgra) for job in batch],
             max_register_pressure=opts.max_register_pressure,

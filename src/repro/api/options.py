@@ -119,6 +119,8 @@ class CompileOptions:
     # ---------------------------------------------------- window striping
     window_offset: int = 0              # this worker's stripe (service racing)
     window_stride: int = 1              # stripe count
+    # ------------------------------------------------------ observability
+    trace: bool = False                 # structured span tracing (repro.obs, §15)
     # ------------------------------------------------------ service knobs
     jobs: int | None = None             # batch workers (None = os.cpu_count())
     deadline_s: float | None = None     # per-job wall budget in compile_batch
@@ -388,6 +390,11 @@ def add_cli_args(parser: argparse.ArgumentParser) -> None:
     g.add_argument("--exact-budget-s", type=float, default=None,
                    dest="exact_budget_s",
                    help="wall budget per certification sweep (default 20)")
+    g.add_argument("--trace", metavar="OUT.json", default=None,
+                   dest="trace_out",
+                   help="record structured compile-pipeline spans and write "
+                        "a Perfetto-loadable Chrome trace-event JSON file "
+                        "(summarize with tools/trace_report.py; DESIGN.md §15)")
 
 
 def options_from_args(args: argparse.Namespace) -> CompileOptions:
@@ -401,4 +408,9 @@ def options_from_args(args: argparse.Namespace) -> CompileOptions:
         for f in _CLI_FIELDS
         if getattr(args, f, None) is not None
     }
+    # --trace OUT.json both enables tracing and names the output file; the
+    # path itself stays CLI-side (args.trace_out) — options only carry the
+    # enable bit so the field stays JSON-round-trippable.
+    if getattr(args, "trace_out", None):
+        overrides["trace"] = True
     return resolve_options(getattr(args, "profile", None), **overrides)

@@ -37,6 +37,7 @@ __all__ = [
     "FAILURE_KINDS",
     "PhaseTimings",
     "SearchTrace",
+    "build_metrics",
     "classify_failure",
 ]
 
@@ -89,13 +90,15 @@ class PhaseTimings:
     time_s: float = 0.0        # TIME: modulo-schedule search
     space_s: float = 0.0       # SPACE: monomorphism search
     validate_s: float = 0.0    # independent re-validation of candidate/served mappings
-    total_s: float = 0.0       # whole compile() call
+    exact_s: float = 0.0       # exact-check certification post-pass (§14)
+    total_s: float = 0.0       # whole compile() call (incl. exact_s when run)
 
     def as_dict(self) -> dict:
         return {
             "time_s": round(self.time_s, 6),
             "space_s": round(self.space_s, 6),
             "validate_s": round(self.validate_s, 6),
+            "exact_s": round(self.exact_s, 6),
             "total_s": round(self.total_s, 6),
         }
 
@@ -118,6 +121,57 @@ class SearchTrace:
             "mono_failures": self.mono_failures,
             "space_nodes_visited": self.space_nodes_visited,
         }
+
+
+def _hit_rate(hits: int, lookups: int) -> float | None:
+    return round(hits / lookups, 6) if lookups else None
+
+
+def build_metrics(
+    *,
+    trace: "SearchTrace",
+    phases: "PhaseTimings",
+    time_steps: int = 0,
+    space_restarts: int = 0,
+    mem_lookups: int = 0,
+    mem_hits: int = 0,
+    disk_lookups: int = 0,
+    disk_hits: int = 0,
+    disk_promotions: int = 0,
+) -> dict:
+    """The aggregated per-row ``metrics`` block (DESIGN.md §15.3).
+
+    One builder serves every frontend: ``from_map_result`` (CLI/bench
+    in-process rows) and ``from_job_report`` (service rows) both call it
+    with counters their respective stats objects carry, so the schema
+    cannot diverge between outputs. ``hit_rate`` is None when the layer
+    was never consulted (``use_cache=False`` / deterministic runs).
+    """
+    return {
+        "solver": {
+            "rounds": trace.rounds,
+            "windows_opened": trace.windows_opened,
+            "time_solutions_tried": trace.time_solutions_tried,
+            "time_steps": time_steps,
+            "mono_failures": trace.mono_failures,
+            "space_nodes_visited": trace.space_nodes_visited,
+            "space_restarts": space_restarts,
+        },
+        "cache": {
+            "memory": {
+                "lookups": mem_lookups,
+                "hits": mem_hits,
+                "hit_rate": _hit_rate(mem_hits, mem_lookups),
+            },
+            "disk": {
+                "lookups": disk_lookups,
+                "hits": disk_hits,
+                "promotions": disk_promotions,
+                "hit_rate": _hit_rate(disk_hits, disk_lookups),
+            },
+        },
+        "phases": phases.as_dict(),
+    }
 
 
 @dataclass
@@ -167,6 +221,10 @@ class CompileResult:
     #: optimality certificate dict (``exact_backends.Certificate.as_dict``,
     #: DESIGN.md §14) — present only when the compile ran with exact_check
     certificate: dict | None = None
+    #: aggregated observability block (:func:`build_metrics`, DESIGN.md §15.3):
+    #: solver counters, both cache layers' hit rates, per-phase rollups —
+    #: always emitted with an identical schema in CLI, bench, and service rows
+    metrics: dict = field(default_factory=dict)
     mapping: "Mapping | None" = None
 
     # ------------------------------------------------------------ constructors
@@ -181,6 +239,19 @@ class CompileResult:
                       else "disk" if s.disk_cache_hit else "solve")
         else:
             source = None
+        phases = PhaseTimings(
+            time_s=s.time_phase_s,
+            space_s=s.space_phase_s,
+            validate_s=s.validate_s,
+            total_s=s.total_s,
+        )
+        trace = SearchTrace(
+            rounds=s.rounds,
+            windows_opened=s.windows_opened,
+            time_solutions_tried=s.time_solutions_tried,
+            mono_failures=s.mono_failures,
+            space_nodes_visited=s.space_nodes_visited,
+        )
         return cls(
             name=name or (res.mapping.dfg.name if res.ok else name),
             ok=res.ok,
@@ -192,22 +263,22 @@ class CompileResult:
             space_backend=s.space_backend,
             source=source,
             wall_s=wall_s if wall_s is not None else s.total_s,
-            phases=PhaseTimings(
-                time_s=s.time_phase_s,
-                space_s=s.space_phase_s,
-                validate_s=s.validate_s,
-                total_s=s.total_s,
-            ),
-            trace=SearchTrace(
-                rounds=s.rounds,
-                windows_opened=s.windows_opened,
-                time_solutions_tried=s.time_solutions_tried,
-                mono_failures=s.mono_failures,
-                space_nodes_visited=s.space_nodes_visited,
-            ),
+            phases=phases,
+            trace=trace,
             failure=classify_failure(res.ok, res.reason),
             reason=res.reason,
             route_movs=res.mapping.num_route_movs if res.ok else 0,
+            metrics=build_metrics(
+                trace=trace,
+                phases=phases,
+                time_steps=s.time_steps,
+                space_restarts=s.space_restarts,
+                mem_lookups=s.mem_cache_lookups,
+                mem_hits=s.mem_cache_hits,
+                disk_lookups=s.disk_cache_lookups,
+                disk_hits=s.disk_cache_hits,
+                disk_promotions=s.disk_cache_promotions,
+            ),
             mapping=res.mapping,
         )
 
@@ -267,6 +338,19 @@ class CompileResult:
                       else "disk" if job.disk_cache_hit else "solve")
         else:
             source = None
+        phases = PhaseTimings(
+            time_s=job.time_phase_s,
+            space_s=job.space_phase_s,
+            validate_s=job.validate_s,
+            total_s=job.wall_s,
+        )
+        trace = SearchTrace(
+            rounds=job.rounds,
+            windows_opened=job.windows_opened,
+            time_solutions_tried=job.time_solutions_tried,
+            mono_failures=job.mono_failures,
+            space_nodes_visited=job.space_nodes_visited,
+        )
         return cls(
             name=job.name,
             ok=job.ok,
@@ -278,23 +362,23 @@ class CompileResult:
             space_backend=job.space_backend,
             source=source,
             wall_s=job.wall_s,
-            phases=PhaseTimings(
-                time_s=job.time_phase_s,
-                space_s=job.space_phase_s,
-                validate_s=job.validate_s,
-                total_s=job.wall_s,
-            ),
-            trace=SearchTrace(
-                rounds=job.rounds,
-                windows_opened=job.windows_opened,
-                time_solutions_tried=job.time_solutions_tried,
-                mono_failures=job.mono_failures,
-                space_nodes_visited=job.space_nodes_visited,
-            ),
+            phases=phases,
+            trace=trace,
             failure=classify_failure(job.ok, job.reason, job.cancelled),
             reason=job.reason,
             cancelled=job.cancelled,
             route_movs=mapping.num_route_movs if mapping is not None else 0,
+            metrics=build_metrics(
+                trace=trace,
+                phases=phases,
+                time_steps=job.time_steps,
+                space_restarts=job.space_restarts,
+                mem_lookups=job.mem_cache_lookups,
+                mem_hits=job.mem_cache_hits,
+                disk_lookups=job.disk_cache_lookups,
+                disk_hits=job.disk_cache_hits,
+                disk_promotions=job.disk_cache_promotions,
+            ),
             mapping=mapping,
         )
 
@@ -323,6 +407,8 @@ class CompileResult:
             "reason": self.reason,
             "cancelled": self.cancelled,
             "route_movs": self.route_movs,
+            "metrics": self.metrics or build_metrics(
+                trace=self.trace, phases=self.phases),
         }
         if self.utilization is not None:
             row["utilization"] = self.utilization
@@ -355,6 +441,29 @@ class BatchResult:
             "solved": sum(r.source == "solve" for r in self.results),
             "failed": sum(not r.ok for r in self.results),
         }
+
+    @property
+    def metrics(self) -> dict:
+        """Batch-level rollup of the per-row metrics blocks (§15.3):
+        summed solver counters and both cache layers' aggregate hit rates
+        (the ROADMAP compile-daemon "hit-rate telemetry" numbers)."""
+        rows = [r.metrics for r in self.results if r.metrics]
+        solver: dict[str, int] = {}
+        cache = {
+            "memory": {"lookups": 0, "hits": 0},
+            "disk": {"lookups": 0, "hits": 0, "promotions": 0},
+        }
+        for m in rows:
+            for k, v in m.get("solver", {}).items():
+                solver[k] = solver.get(k, 0) + v
+            for layer, counters in cache.items():
+                src = m.get("cache", {}).get(layer, {})
+                for k in counters:
+                    counters[k] += src.get(k, 0) or 0
+        for layer, counters in cache.items():
+            counters["hit_rate"] = _hit_rate(
+                counters["hits"], counters["lookups"])
+        return {"solver": solver, "cache": cache}
 
     def __iter__(self):
         return iter(self.results)
@@ -390,5 +499,6 @@ class BatchResult:
             "wall_s": round(self.wall_s, 4),
             "num_workers": self.num_workers,
             "cache": self.cache_counters,
+            "metrics": self.metrics,
             "jobs": [r.as_dict() for r in self.results],
         }

@@ -33,6 +33,7 @@ import json
 import os
 import sys
 
+from repro import obs
 from repro.api import Compiler, add_cli_args, options_from_args
 from repro.core.cgra import CGRA
 from repro.core.dfg import DFG
@@ -132,7 +133,12 @@ def main(argv=None) -> int:
             print(f"workload incompatible with {target}: {p}", file=sys.stderr)
         return 2
 
-    batch = compiler.compile_batch(dfgs)
+    # structured tracing (DESIGN.md §15): --trace records the whole batch
+    # under one tracer and writes a Perfetto-loadable Chrome trace JSON
+    with obs.session(getattr(args, "trace_out", None), enable=opts.trace):
+        batch = compiler.compile_batch(dfgs)
+    if getattr(args, "trace_out", None) and not args.quiet:
+        print(f"wrote trace {os.path.abspath(args.trace_out)}")
 
     if args.report_utilization:
         from repro.core.simulate import utilization_report

@@ -33,6 +33,7 @@ import dataclasses
 import time as _time
 from dataclasses import dataclass, field
 
+from ... import obs
 from ..cgra import CGRA
 from ..dfg import DFG
 from ..mapper import Mapping, _pressure_offenders, _rebuild_mapping
@@ -196,8 +197,11 @@ def certify_mapping(
 
         # direct model first: a sat here is a real mapping whatever the
         # route allowance was, and with hops == 1 its unsat is the proof
-        out = solve_joint(dfg, cgra, k, reach_hops=1,
-                          node_budget=node_budget, deadline_s=deadline_k)
+        with obs.span("exact.probe", kernel=dfg.name, ii=k,
+                      reach_hops=1) as sp:
+            out = solve_joint(dfg, cgra, k, reach_hops=1,
+                              node_budget=node_budget, deadline_s=deadline_k)
+            sp.set(outcome=out.status, nodes=out.nodes_visited)
         cert.probes.append({"ii": k, "outcome": out.status, "reach_hops": 1,
                             "nodes": out.nodes_visited,
                             "wall_s": round(out.wall_s, 4)})
@@ -229,9 +233,12 @@ def certify_mapping(
             if hops > 1:
                 # direct impossibility does not bound mov-realised mappings:
                 # refute the reach-relaxed model too (§14.3)
-                rout = solve_joint(dfg, cgra, k, reach_hops=hops,
-                                   node_budget=node_budget,
-                                   deadline_s=deadline_k)
+                with obs.span("exact.probe", kernel=dfg.name, ii=k,
+                              reach_hops=hops) as sp:
+                    rout = solve_joint(dfg, cgra, k, reach_hops=hops,
+                                       node_budget=node_budget,
+                                       deadline_s=deadline_k)
+                    sp.set(outcome=rout.status, nodes=rout.nodes_visited)
                 cert.probes.append({
                     "ii": k, "outcome": rout.status, "reach_hops": hops,
                     "nodes": rout.nodes_visited,

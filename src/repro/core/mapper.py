@@ -40,6 +40,7 @@ import time as _time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
+from .. import obs
 from .cgra import CGRA
 from .dfg import DFG, Route, splice_routes
 from .mono import SpaceStats, check_monomorphism, check_routes, find_monomorphism
@@ -189,6 +190,15 @@ class MapperStats:
     cache_hit: bool = False          # served from the in-process LRU
     disk_cache_hit: bool = False     # served from the persistent disk cache
     space_nodes_visited: int = 0
+    # ---- observability counters (DESIGN.md §15.3): per-compile solver and
+    # cache-layer telemetry mirrored into JobReport/CompileResult.metrics
+    time_steps: int = 0              # cumulative time-backend search steps
+    space_restarts: int = 0          # space-engine restarts across all probes
+    mem_cache_lookups: int = 0       # in-process LRU consultations (0 or 1)
+    mem_cache_hits: int = 0
+    disk_cache_lookups: int = 0      # persistent-layer consultations (0 or 1)
+    disk_cache_hits: int = 0
+    disk_cache_promotions: int = 0   # disk hits promoted into the LRU
 
 
 @dataclass
@@ -212,8 +222,48 @@ _MAP_CACHE: OrderedDict[
 _MAP_CACHE_MAX = 128
 
 
+@dataclass
+class MemoryCacheStats:
+    """Hit/miss counters for the in-process LRU mapping cache.
+
+    The symmetric twin of ``service.cache.CacheStats`` (the persistent
+    layer has counted since PR 2; the LRU never did) — process-wide, reset
+    together with the cache by :func:`clear_mapping_cache`, and surfaced
+    per compile through ``CompileResult.metrics`` (DESIGN.md §15.3).
+    """
+
+    hits: int = 0
+    misses: int = 0
+    writes: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float | None:
+        n = self.hits + self.misses
+        return round(self.hits / n, 6) if n else None
+
+    def as_dict(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "writes": self.writes,
+            "evictions": self.evictions,
+            "hit_rate": self.hit_rate,
+        }
+
+
+_MEM_CACHE_STATS = MemoryCacheStats()
+
+
+def memory_cache_stats() -> MemoryCacheStats:
+    """The process-wide LRU counters (live object, not a snapshot)."""
+    return _MEM_CACHE_STATS
+
+
 def clear_mapping_cache() -> None:
+    global _MEM_CACHE_STATS
     _MAP_CACHE.clear()
+    _MEM_CACHE_STATS = MemoryCacheStats()
 
 
 def _cache_base_key(
@@ -258,8 +308,10 @@ def _cache_put(base_key: tuple, mapping: Mapping) -> None:
         list(mapping.t_abs), list(mapping.placement), mapping.routes_spec()
     )
     _MAP_CACHE.move_to_end(key)
+    _MEM_CACHE_STATS.writes += 1
     while len(_MAP_CACHE) > _MAP_CACHE_MAX:
         _MAP_CACHE.popitem(last=False)
+        _MEM_CACHE_STATS.evictions += 1
 
 
 def _cache_get(
@@ -270,7 +322,9 @@ def _cache_get(
         hit = _MAP_CACHE.get(key)
         if hit is not None:
             _MAP_CACHE.move_to_end(key)
+            _MEM_CACHE_STATS.hits += 1
             return ii, list(hit[0]), list(hit[1]), hit[2]
+    _MEM_CACHE_STATS.misses += 1
     return None
 
 
@@ -576,6 +630,7 @@ def _map_dfg_impl(
             dfg, cgra, connectivity, max_register_pressure, max_route_hops,
             space_backend,
         )
+        stats.mem_cache_lookups += 1
         hit = _cache_get(base_key, stats.m_ii, hi)
         if hit is not None:
             ii, t_abs, placement, routes_spec = hit
@@ -583,11 +638,15 @@ def _map_dfg_impl(
                                        routes_spec)
             if not timed_validate(mapping) and not pressure_reject(mapping):
                 stats.cache_hit = True
+                stats.mem_cache_hits += 1
+                obs.event("cache.memory.hit", kernel=dfg.name, ii=ii)
                 stats.final_ii = ii
                 stats.backend = "cache"
                 stats.total_s = _time.perf_counter() - start
                 return MapResult(mapping, stats)
             _cache_drop(base_key, ii)   # invalid/oversubscribed: never serve
+        if not stats.mem_cache_hits:
+            obs.event("cache.memory.miss", kernel=dfg.name)
         # memory missed: consult the persistent layer (DESIGN.md §9).
         # Function-local import by design: service/batch.py imports this
         # module at top level, so a module-level import here would close an
@@ -598,9 +657,11 @@ def _map_dfg_impl(
         if resolved is not None:
             disk = DiskMappingCache(resolved)
             lo = stats.m_ii
+            stats.disk_cache_lookups += 1
             while True:
                 dhit = disk.get(base_key, lo, hi)
                 if dhit is None:
+                    obs.event("cache.disk.miss", kernel=dfg.name)
                     break
                 ii, t_abs, placement, routes_spec = dhit
                 try:
@@ -619,6 +680,10 @@ def _map_dfg_impl(
                     continue
                 _cache_put(base_key, mapping)          # promote to memory
                 stats.disk_cache_hit = True
+                stats.disk_cache_hits += 1
+                stats.disk_cache_promotions += 1
+                obs.event("cache.disk.hit", kernel=dfg.name, ii=ii)
+                obs.event("cache.disk.promote", kernel=dfg.name, ii=ii)
                 stats.final_ii = ii
                 stats.backend = "disk-cache"
                 stats.total_s = _time.perf_counter() - start
@@ -650,6 +715,7 @@ def _map_dfg_impl(
 
     def finish(mapping: Mapping | None, reason: str = "") -> MapResult:
         stats.time_phase_s += sum(s.stats.solver_time_s for s in solvers)
+        stats.time_steps = sum(s.stats.steps for s in solvers)
         stats.total_s = _time.perf_counter() - start
         if mapping is not None:
             errs = timed_validate(mapping)
@@ -665,6 +731,21 @@ def _map_dfg_impl(
         return MapResult(mapping, stats, reason=reason)
 
     def try_space(
+        sol: TimeSolution, w: _Window, rnd: int,
+        node_budget: int, restarts: int, salt: int = 0,
+    ) -> Mapping | None:
+        if not obs.enabled():
+            return _try_space(sol, w, rnd, node_budget, restarts, salt)
+        n0, r0 = stats.space_nodes_visited, stats.space_restarts
+        with obs.span("space.probe", ii=w.ii, slack=w.slack, round=rnd,
+                      engine=space_backend) as sp:
+            mapping = _try_space(sol, w, rnd, node_budget, restarts, salt)
+            sp.set(found=mapping is not None,
+                   nodes=stats.space_nodes_visited - n0,
+                   restarts=stats.space_restarts - r0)
+            return mapping
+
+    def _try_space(
         sol: TimeSolution, w: _Window, rnd: int,
         node_budget: int, restarts: int, salt: int = 0,
     ) -> Mapping | None:
@@ -718,6 +799,7 @@ def _map_dfg_impl(
                 break
         stats.space_phase_s += sstats.search_time_s
         stats.space_nodes_visited += sstats.nodes_visited
+        stats.space_restarts += sstats.restarts
         if space is None:
             stats.mono_failures += 1
             return None
@@ -798,6 +880,8 @@ def _map_dfg_impl(
     rnd = 0
     while rnd < max_rounds:
         stats.rounds = rnd + 1
+        obs.event("mapper.round", round=rnd, windows=len(windows),
+                  best_ii=best.ii if best is not None else None)
         if best is not None:
             if polish_left <= 0 or not windows:
                 return finish(best)
@@ -875,6 +959,8 @@ def _map_dfg_impl(
                 solvers.append(w.solver)
                 stats.windows_opened += 1
                 stats.backend = w.solver.stats.backend
+                obs.event("mapper.window.open", ii=w.ii, slack=w.slack,
+                          backend=stats.backend)
             # 1) retry cached partitions with this round's bigger space budget
             if rnd > 0 and w.pending:
                 mapping = None

@@ -27,6 +27,7 @@ from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Sequence
 
+from ... import obs
 from ..cgra import CGRA
 from ..dfg import DFG
 from ..mapper import MapResult, map_dfg
@@ -115,6 +116,16 @@ class JobReport:
     windows_opened: int = 0
     time_solutions_tried: int = 0
     space_nodes_visited: int = 0
+    # solver/cache telemetry mirrored from MapperStats (DESIGN.md §15.3) so
+    # the api layer builds an identical ``CompileResult.metrics`` block on
+    # the caller's side of the process boundary
+    time_steps: int = 0
+    space_restarts: int = 0
+    mem_cache_lookups: int = 0
+    mem_cache_hits: int = 0
+    disk_cache_lookups: int = 0
+    disk_cache_hits: int = 0
+    disk_cache_promotions: int = 0
     # the mapping itself (success only); excluded from as_dict row payloads.
     # ``routes`` is the route-through spec (src, dst, distance, n_movs) rows
     # needed to rebuild the rewritten DFG caller-side (DESIGN.md §12.2).
@@ -199,6 +210,13 @@ def _job_report(job: CompileJob, res: MapResult, wall_s: float) -> JobReport:
         windows_opened=res.stats.windows_opened,
         time_solutions_tried=res.stats.time_solutions_tried,
         space_nodes_visited=res.stats.space_nodes_visited,
+        time_steps=res.stats.time_steps,
+        space_restarts=res.stats.space_restarts,
+        mem_cache_lookups=res.stats.mem_cache_lookups,
+        mem_cache_hits=res.stats.mem_cache_hits,
+        disk_cache_lookups=res.stats.disk_cache_lookups,
+        disk_cache_hits=res.stats.disk_cache_hits,
+        disk_cache_promotions=res.stats.disk_cache_promotions,
         t_abs=list(res.mapping.t_abs) if res.ok else None,
         placement=list(res.mapping.placement) if res.ok else None,
         routes=[list(r) for r in res.mapping.routes_spec()] if res.ok else None,
@@ -212,13 +230,32 @@ def _cancelled_report(job: CompileJob, reason: str) -> JobReport:
     )
 
 
-def _run_job(job: CompileJob, defaults: dict, stop=None) -> JobReport:
+def _run_job(job: CompileJob, defaults: dict, stop=None,
+             trace_dir: str | None = None) -> JobReport:
     """Run one job and build its report; shared by the inline and pool paths.
 
     ``stop`` is a zero-arg cancellation predicate (or None). In pool workers
     it is derived from the inherited stop event (:func:`_run_job_pooled`); in
     the inline path it is the caller's ``cancel.is_set``.
+
+    ``trace_dir``: when set and no tracer is already active in this process
+    (the pool path), the job runs under a local tracer whose events are
+    appended to a per-pid shard file and merged caller-side (DESIGN.md
+    §15.2). With a tracer already active (the inline path) spans record into
+    it directly and no shard is written.
     """
+    active = obs.get_tracer()
+    if trace_dir is not None and (active is None
+                                  or active.pid != os.getpid()):
+        # pool worker — note a forked child *inherits* the parent's tracer
+        # object, but events recorded on that copy die with the process, so
+        # detect it by pid and trace into a fresh local tracer persisted as
+        # a per-pid shard instead
+        tracer = obs.Tracer(process_name=f"repro-worker-{os.getpid()}")
+        with obs.tracing(tracer):
+            rep = _run_job(job, defaults, stop=stop)
+        obs.append_shard(trace_dir, tracer.events, tracer.counters)
+        return rep
     opts = {**defaults, **_as_mapper_kwargs(job.options)}
     if stop is not None:
         if stop():
@@ -226,7 +263,9 @@ def _run_job(job: CompileJob, defaults: dict, stop=None) -> JobReport:
         opts.setdefault("should_stop", stop)
     t0 = _time.perf_counter()
     try:
-        res = map_dfg(job.dfg, job.cgra, **opts)
+        with obs.span("job", kernel=job.name) as sp:
+            res = map_dfg(job.dfg, job.cgra, **opts)
+            sp.set(ok=res.ok, ii=res.mapping.ii if res.ok else None)
     except Exception as exc:
         # any per-job failure (bad DFG, incompatible options, cache I/O)
         # fails its own row, never the batch
@@ -240,9 +279,10 @@ def _run_job(job: CompileJob, defaults: dict, stop=None) -> JobReport:
     return rep
 
 
-def _run_job_pooled(job: CompileJob, defaults: dict) -> JobReport:
+def _run_job_pooled(job: CompileJob, defaults: dict,
+                    trace_dir: str | None = None) -> JobReport:
     """Top-level (picklable) pool entry: binds the inherited stop event."""
-    return _run_job(job, defaults, stop=_should_stop())
+    return _run_job(job, defaults, stop=_should_stop(), trace_dir=trace_dir)
 
 
 def compile_many(
@@ -255,6 +295,7 @@ def compile_many(
     use_cache: bool = True,
     cancel=None,
     map_options: dict | None = None,
+    trace_dir: str | None = None,
 ) -> CompileReport:
     """Compile a batch of DFGs concurrently across a process pool.
 
@@ -293,6 +334,10 @@ def compile_many(
     * ``map_options`` — extra ``map_dfg`` kwargs applied to every job
       (overridden by each job's own ``options``): a dict, or a typed
       :class:`repro.api.CompileOptions` whose mapper fields are forwarded.
+    * ``trace_dir`` — span-shard directory for structured tracing (DESIGN.md
+      §15.2): each pool worker appends its spans to ``shard-<pid>.jsonl``
+      there; the caller merges the shards with :func:`repro.obs.merge_shards`
+      for a single cross-process timeline.
     """
     t0 = _time.perf_counter()
     defaults: dict = _as_mapper_kwargs(map_options)
@@ -306,7 +351,8 @@ def compile_many(
     num_workers = jobs if jobs is not None else (os.cpu_count() or 1)
     if num_workers <= 1 or len(batch) <= 1:
         stop = cancel.is_set if cancel is not None else None
-        reports = [_run_job(job, defaults, stop=stop) for job in batch]
+        reports = [_run_job(job, defaults, stop=stop, trace_dir=trace_dir)
+                   for job in batch]
         return CompileReport(reports, _time.perf_counter() - t0, 1)
 
     import multiprocessing as mp
@@ -320,7 +366,7 @@ def compile_many(
         initializer=_pool_init,
         initargs=(stop_event,),
     ) as pool:
-        futures = {pool.submit(_run_job_pooled, job, defaults): i
+        futures = {pool.submit(_run_job_pooled, job, defaults, trace_dir): i
                    for i, job in enumerate(batch)}
         pending = set(futures)
         # poll only when there is a cancel event to observe; block otherwise

@@ -41,6 +41,7 @@ import random
 import time as _time
 from collections import deque
 
+from ... import obs
 from ..cgra import CGRA, op_class
 from ..dfg import DFG
 from .base import (
@@ -422,9 +423,31 @@ class AnnealSpaceBackend:
                 return nr * cols + nc
 
             route_attempts = 0
+            # energy-curve telemetry (DESIGN.md §15, ROADMAP "anneal quality
+            # tuning"): purely observational — counters and obs events only,
+            # never an rng draw, so traced and untraced runs take the
+            # identical search path
+            traced = obs.enabled()
+            accepts = proposals = 0
+
+            def emit_restart(found: bool) -> None:
+                # per-restart energy-curve summary: how the restart ended
+                # (energy/violations left, realised accept rate) — the data
+                # the anneal-quality tuning reads back out of traces
+                if traced:
+                    obs.event(
+                        "space.anneal.restart", ii=ii, restart=r, found=found,
+                        energy=round(energy, 3), viol=viol,
+                        accepts=accepts, proposals=proposals,
+                        accept_rate=(round(accepts / proposals, 4)
+                                     if proposals else None),
+                        route_attempts=route_attempts,
+                    )
+
             if viol == 0:
                 sol = try_finish()
                 if sol is not None:
+                    emit_restart(found=True)
                     stats.search_time_s += _time.perf_counter() - start
                     return sol
                 route_attempts += 1
@@ -446,6 +469,14 @@ class AnnealSpaceBackend:
                         break
                     if deadline is not None and _time.perf_counter() > deadline:
                         break
+                    if traced and not step & 0xFFF:
+                        obs.event(
+                            "space.anneal.sample", ii=ii, restart=r,
+                            step=step, energy=round(energy, 3), viol=viol,
+                            temperature=round(temp, 5),
+                            accept_rate=(round(accepts / proposals, 4)
+                                         if proposals else None),
+                        )
                 stats.nodes_visited += 1
 
                 # -------- propose: repair a violated edge, or explore
@@ -502,6 +533,7 @@ class AnnealSpaceBackend:
                             continue
 
                 # -------- evaluate delta (x moves to target; w takes x's slot)
+                proposals += 1
                 px = placement[x]
                 if w >= 0:
                     o0, c0 = node_cost(x)[0] + node_cost(w)[0], node_cost(x)[1] + node_cost(w)[1]
@@ -519,6 +551,7 @@ class AnnealSpaceBackend:
                         energy += d_c
                         refresh_bad(x)
                         refresh_bad(w)
+                        accepts += 1
                     else:
                         placement[x], placement[w] = px, target
                         stats.backtracks += 1
@@ -534,6 +567,7 @@ class AnnealSpaceBackend:
                         viol += d_o
                         energy += d_c
                         refresh_bad(x)
+                        accepts += 1
                     else:
                         placement[x] = px
                         stats.backtracks += 1
@@ -542,6 +576,7 @@ class AnnealSpaceBackend:
                 if viol == 0:
                     sol = try_finish()
                     if sol is not None:
+                        emit_restart(found=True)
                         stats.search_time_s += _time.perf_counter() - start
                         return sol
                     route_attempts += 1
@@ -565,6 +600,7 @@ class AnnealSpaceBackend:
                         if o:
                             bad.add((u, v))
                     temp = max(temp, t0 / 4)
+            emit_restart(found=False)
             if aborted:
                 break
         stats.search_time_s += _time.perf_counter() - start

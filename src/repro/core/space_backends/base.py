@@ -24,6 +24,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Protocol
 
+from ... import obs
 from ..cgra import CGRA, op_class
 from ..dfg import DFG
 from ..time_backends.base import mov_slot_headroom
@@ -247,11 +248,16 @@ class _RouteContext:
             gap = self.t_abs[e.dst] - self.t_abs[e.src] + ii * e.distance
             route = self._route_edge(e, p_src, p_dst, gap, occ, extra, headroom)
             if route is None:
+                obs.event("space.route", ok=False, ii=ii,
+                          edge=f"{e.src}->{e.dst}", routed=len(routes))
                 return None
             for pe, t in zip(route.path, route.times):
                 extra[t % ii] |= 1 << pe
                 headroom[t % ii] -= 1
             routes.append(route)
+        if routes:
+            obs.event("space.route", ok=True, ii=ii, routed=len(routes),
+                      movs=sum(len(r.path) for r in routes))
         return routes
 
     def _route_edge(

@@ -33,6 +33,7 @@ from __future__ import annotations
 import random
 import time as _time
 
+from ... import obs
 from ..cgra import CGRA, op_class
 from ..dfg import DFG
 from .base import (
@@ -85,12 +86,14 @@ def find_monomorphism(
     # weights 1,1,2,4,...  (the last restart gets ~half the total budget)
     weights = [1] + [1 << min(r, 30) for r in range(n_restarts - 1)]
     total_w = sum(weights)
+    traced = obs.enabled()
     for r in range(n_restarts):
         remaining = budget - (_time.perf_counter() - start)
         if remaining <= 0:
             break
         stats.restarts += 1
         frac = weights[r] / total_w
+        n0, b0 = stats.nodes_visited, stats.backtracks
         sol = _search_once(
             dfg, cgra, labels, ii,
             deadline=(
@@ -105,6 +108,18 @@ def find_monomorphism(
             stats=stats,
             route_ctx=route_ctx,
         )
+        if traced:
+            # restart-boundary telemetry only (DESIGN.md §15): the dive
+            # itself stays untouched — the golden 4x4 pins its search path
+            # bit-for-bit. prune_rate = backtracks per visited node; a high
+            # rate means the candidate masks are paying for themselves.
+            nodes = stats.nodes_visited - n0
+            backtracks = stats.backtracks - b0
+            obs.event(
+                "space.exact.restart", ii=ii, restart=r, nodes=nodes,
+                backtracks=backtracks, found=sol is not None,
+                prune_rate=round(backtracks / nodes, 4) if nodes else None,
+            )
         if sol is not None:
             placement, routes = sol
             stats.search_time_s += _time.perf_counter() - start

@@ -43,6 +43,11 @@ class IncrementalCPBackend:
         self.timeout_s = timeout_s
         n, ii = p.num_nodes, p.ii
         self.exhausted = False
+        # observational telemetry (DESIGN.md §15): cumulative decision steps
+        # and partition realizations across every next_solution() call —
+        # read via getattr by TimeSolver, never consulted by the search
+        self.steps_total = 0
+        self.realizations = 0
         self._blocked: set[tuple[int, ...]] = set()
 
         # per-(node, residue) min/max absolute time inside the window
@@ -122,6 +127,7 @@ class IncrementalCPBackend:
             if depth == n:
                 labels = tuple(self._labels)
                 if labels not in self._blocked:
+                    self.realizations += 1
                     t_abs = self._realize()
                     if t_abs is not None:
                         return t_abs
@@ -130,6 +136,7 @@ class IncrementalCPBackend:
                     return None
                 continue
             steps += 1
+            self.steps_total += 1
             if step_budget is not None and steps > step_budget:
                 return None  # trail kept: resumable
             if deadline is not None and not steps & 0x3F:

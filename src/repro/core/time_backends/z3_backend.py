@@ -32,6 +32,10 @@ class Z3Backend:
         self.timeout_s = timeout_s
         self.exhausted = False
         self._solutions = 0
+        # observational telemetry (DESIGN.md §15): one "step" per solver
+        # check() call — the closest z3 analogue to the cp backend's
+        # decision-step counter; read via getattr by TimeSolver
+        self.steps_total = 0
         n, ii = p.num_nodes, p.ii
         self._solver = z3.Solver()
         if timeout_s is not None:
@@ -97,6 +101,7 @@ class Z3Backend:
                 "timeout",
                 int(self.timeout_s * 1000) if self.timeout_s is not None else 0,
             )
+        self.steps_total += 1
         res = self._solver.check()
         if res == z3.unsat:
             self.exhausted = True

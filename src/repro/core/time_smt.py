@@ -40,6 +40,7 @@ from __future__ import annotations
 import time as _time
 from dataclasses import dataclass
 
+from .. import obs
 from .cgra import CGRA
 from .dfg import DFG
 from .schedule import MobilitySchedule, asap_schedule, modulo_windows
@@ -84,6 +85,7 @@ class TimeSolverStats:
     num_solutions_enumerated: int = 0
     backend: str = ""
     blocked: int = 0
+    steps: int = 0          # cumulative backend search steps / solver calls
 
 
 class TimeSolver:
@@ -288,16 +290,25 @@ class TimeSolver:
         step_budget: int | None = None,
     ) -> TimeSolution | None:
         start = _time.perf_counter()
-        try:
-            t_abs = self._engine.next_solution(
-                deadline=deadline, step_budget=step_budget
-            )
-            if t_abs is None:
-                return None
-            self.stats.num_solutions_enumerated += 1
-            return TimeSolution(self.ii, list(t_abs))
-        finally:
-            self.stats.solver_time_s += _time.perf_counter() - start
+        span = obs.span("time.probe", ii=self.ii, backend=self.stats.backend)
+        steps0 = getattr(self._engine, "steps_total", 0)
+        with span:
+            try:
+                t_abs = self._engine.next_solution(
+                    deadline=deadline, step_budget=step_budget
+                )
+                if t_abs is None:
+                    span.set(found=False,
+                             exhausted=self._engine.exhausted,
+                             steps=getattr(self._engine, "steps_total", 0) - steps0)
+                    return None
+                self.stats.num_solutions_enumerated += 1
+                span.set(found=True,
+                         steps=getattr(self._engine, "steps_total", 0) - steps0)
+                return TimeSolution(self.ii, list(t_abs))
+            finally:
+                self.stats.solver_time_s += _time.perf_counter() - start
+                self.stats.steps = getattr(self._engine, "steps_total", 0)
 
 
 def check_time_solution(

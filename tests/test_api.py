@@ -347,6 +347,7 @@ def test_result_phase_timings_cover_pipeline():
     assert p.time_s > 0 and p.space_s > 0 and p.validate_s > 0
     assert p.total_s >= p.validate_s
     row = res.as_dict()
-    assert set(row["phases"]) == {"time_s", "space_s", "validate_s", "total_s"}
+    assert set(row["phases"]) == {"time_s", "space_s", "validate_s",
+                                  "exact_s", "total_s"}
     assert row["source"] == "solve"
     assert row["trace"]["windows_opened"] >= 1

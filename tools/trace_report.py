@@ -1,0 +1,187 @@
+#!/usr/bin/env python3
+"""Summarize a Chrome trace-event JSON file emitted by ``repro.compile --trace``.
+
+    python tools/trace_report.py trace.json            # human summary
+    python tools/trace_report.py trace.json --top 15   # wider self-time table
+    python tools/trace_report.py trace.json --check    # schema validation only
+
+The summary has two parts (DESIGN.md §15):
+
+* **Top-N self-time table** — per span *name*, total time minus time spent
+  in child spans on the same (pid, tid) track, so leaf work (solver probes,
+  space dives) isn't double-counted under its parents.
+* **Per-window breakdown** — spans carrying ``ii``/``slack`` args grouped
+  by (II, slack) window, showing where the portfolio spent its budget.
+
+``--check`` validates the Perfetto-loadable schema (well-formed JSON,
+``traceEvents`` list, required keys per phase type, non-negative
+durations) and exits non-zero on the first violation — CI runs this
+against the deterministic 4x4 suite trace.
+
+Stdlib-only; does not import ``repro``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+_REQUIRED = {
+    "X": ("name", "ph", "ts", "dur", "pid", "tid"),
+    "i": ("name", "ph", "ts", "pid", "tid"),
+    "M": ("name", "ph", "pid"),
+}
+
+
+def check(doc) -> "list[str]":
+    """Return a list of schema violations (empty == valid)."""
+    errors = []
+    if not isinstance(doc, dict):
+        return ["top-level document is not a JSON object"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["missing or non-list 'traceEvents'"]
+    if not events:
+        errors.append("'traceEvents' is empty")
+    saw_complete = False
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event #{i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _REQUIRED:
+            errors.append(f"event #{i}: unknown ph {ph!r}")
+            continue
+        for key in _REQUIRED[ph]:
+            if key not in ev:
+                errors.append(f"event #{i} ({ev.get('name')!r}): missing {key!r}")
+        if ph == "X":
+            saw_complete = True
+            if not (isinstance(ev.get("dur"), (int, float)) and ev["dur"] >= 0):
+                errors.append(f"event #{i} ({ev.get('name')!r}): bad dur {ev.get('dur')!r}")
+            if not isinstance(ev.get("ts"), (int, float)):
+                errors.append(f"event #{i} ({ev.get('name')!r}): bad ts {ev.get('ts')!r}")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            errors.append(f"event #{i} ({ev.get('name')!r}): args not an object")
+        if len(errors) >= 20:
+            errors.append("... (truncated)")
+            break
+    if not errors and not saw_complete:
+        errors.append("no complete ('X') span events in trace")
+    return errors
+
+
+def _self_times(events):
+    """Self time per span name: dur minus direct-children dur, per track."""
+    tracks = defaultdict(list)
+    for ev in events:
+        if ev.get("ph") == "X":
+            tracks[(ev.get("pid"), ev.get("tid"))].append(ev)
+    total = defaultdict(float)
+    self_t = defaultdict(float)
+    count = defaultdict(int)
+    for evs in tracks.values():
+        # parents first: earlier start, then longer duration
+        evs.sort(key=lambda e: (e["ts"], -e["dur"]))
+        stack = []  # (end_ts, name, child_dur_accum index into selfacc)
+        selfacc = []
+        for ev in evs:
+            ts, dur, name = ev["ts"], ev["dur"], ev["name"]
+            total[name] += dur
+            count[name] += 1
+            while stack and ts >= stack[-1][0] - 1e-6:
+                stack.pop()
+            if stack:
+                selfacc[stack[-1][2]] += dur  # credit child time to parent
+            selfacc.append(0.0)
+            stack.append((ts + dur, name, len(selfacc) - 1))
+        for ev, child_dur in zip(evs, selfacc):
+            self_t[ev["name"]] += max(0.0, ev["dur"] - child_dur)
+    return total, self_t, count
+
+
+def summarize(doc, top: int = 10) -> "list[str]":
+    events = doc.get("traceEvents", [])
+    spans = [e for e in events if e.get("ph") == "X"]
+    instants = [e for e in events if e.get("ph") == "i"]
+    pids = sorted({e["pid"] for e in spans})
+    lines = [
+        f"{len(spans)} spans, {len(instants)} instant events, "
+        f"{len(pids)} process(es): {pids}",
+    ]
+
+    total, self_t, count = _self_times(events)
+    lines.append("")
+    lines.append(f"top {top} by self time:")
+    lines.append(f"  {'name':28s} {'count':>6s} {'total_ms':>10s} {'self_ms':>10s}")
+    ranked = sorted(self_t.items(), key=lambda kv: -kv[1])[:top]
+    for name, st in ranked:
+        lines.append(
+            f"  {name:28s} {count[name]:6d} {total[name] / 1e3:10.2f} "
+            f"{st / 1e3:10.2f}"
+        )
+
+    # per-(II, slack) window breakdown from span args
+    windows = defaultdict(lambda: [0, 0.0])  # (ii, slack) -> [spans, total_us]
+    for ev in spans:
+        args = ev.get("args") or {}
+        if "ii" in args:
+            key = (args["ii"], args.get("slack"))
+            windows[key][0] += 1
+            windows[key][1] += ev["dur"]
+    if windows:
+        lines.append("")
+        lines.append("per-window breakdown (spans carrying ii/slack args):")
+        lines.append(f"  {'II':>4s} {'slack':>6s} {'spans':>6s} {'total_ms':>10s}")
+        for (ii, slack), (n, us) in sorted(windows.items(),
+                                           key=lambda kv: -kv[1][1]):
+            s = "-" if slack is None else str(slack)
+            lines.append(f"  {ii!s:>4s} {s:>6s} {n:6d} {us / 1e3:10.2f}")
+
+    counters = (doc.get("otherData") or {}).get("counters") or {}
+    if counters:
+        lines.append("")
+        lines.append("counters:")
+        for k in sorted(counters):
+            lines.append(f"  {k:40s} {counters[k]}")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--top", type=int, default=10,
+                    help="rows in the self-time table (default 10)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate schema only; exit non-zero if invalid")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot load {args.trace}: {e}", file=sys.stderr)
+        return 2
+
+    errors = check(doc)
+    if args.check:
+        if errors:
+            for e in errors:
+                print(f"SCHEMA: {e}", file=sys.stderr)
+            return 1
+        n = sum(1 for e in doc["traceEvents"] if e.get("ph") == "X")
+        print(f"OK: {args.trace} valid ({n} spans)")
+        return 0
+
+    if errors:
+        for e in errors:
+            print(f"warning: {e}", file=sys.stderr)
+    for line in summarize(doc, top=args.top):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
