@@ -1,0 +1,376 @@
+"""Compile-daemon load test: zipf-skewed, bursty, mixed-tenant replay.
+
+Exercises the whole serving stack of DESIGN.md §16 — unix-socket NDJSON
+transport, admission control, coalescing, both cache layers, and speculative
+premapping — and emits the CI-gated ``BENCH_service.json`` artifact:
+
+* **warm p50/p99 compile latency** over a fully warmed replay of the trace
+  (client-observed: socket round trip + queue + cache hit). CI gates
+  ``warm_p99_ms <= 50``.
+* **speculative premapping lift** — the same cold trace replayed through two
+  fresh daemons (speculation on vs off, fresh cache dirs, memory LRU cleared
+  between runs); the hops-variant half of the trace hits warm only when the
+  idle-time speculator premapped it, so CI gates
+  ``speculate.warm_hit_rate > no_speculate.warm_hit_rate`` and at least one
+  attributed speculative hit.
+* **admission-control sheds** — a dedicated overload probe (1 worker, queue
+  limit 1, a burst of distinct cold requests) must shed with the
+  machine-readable ``overloaded`` code, answer every request (ok or
+  overloaded, no hangs), and leave the daemon alive.
+
+The trace: kernel popularity is zipf-skewed over fast suite kernels
+(``bitcount``, ``fft``, ``crc32`` — cold-solvable in milliseconds, so the
+bench runs in CI time), arrivals come in bursts with idle gaps between them
+(the gaps are what gives the speculator its window, exactly as on a real
+daemon), requests carry rotating tenant labels, and the second half mixes in
+``max_route_hops=1`` variants of the same kernels — the neighbor axis the
+speculator premaps.
+
+Profile note: ``--profile deterministic-ci`` configures a *mapper* that
+bypasses both cache layers (deterministic mode trades caches for step-budget
+reproducibility, DESIGN.md §6.3) — a cache-serving daemon cannot run that
+way. The harness therefore maps the profile onto the reproducible-but-cached
+equivalent: the cp time backend, fixed seed, ``deterministic=False``,
+``use_cache=True`` with per-run fresh cache dirs. Replays are trace-
+deterministic (fixed RNG seed); latencies are wall-clock measurements.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+import tempfile
+import threading
+import time
+
+
+def percentile(values: list[float], p: float) -> float:
+    """Nearest-rank percentile (p in [0, 100]); 0.0 on an empty list."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    rank = max(0, min(len(xs) - 1, int(round(p / 100.0 * (len(xs) - 1)))))
+    return xs[rank]
+
+
+def _bench_options(options):
+    """Resolve CLI options into what a cache-serving daemon can run.
+
+    Deterministic mode bypasses both mapping-cache layers inside the mapper,
+    and ``use_cache=False`` disables them outright — either would make warm/
+    speculative hit rates structurally zero. Keep the reproducible parts
+    (cp backend, fixed seed) and force the caches on; each daemon session
+    gets its own fresh disk-cache dir from the caller.
+    """
+    if options.deterministic or not options.use_cache:
+        options = options.replace(
+            deterministic=False,
+            use_cache=True,
+            backend="cp" if options.backend == "auto" else options.backend,
+        )
+    # the trace kernels solve in milliseconds; a short budget keeps a
+    # pathological solver stall from wedging a CI lane
+    if options.time_budget_s > 30.0:
+        options = options.replace(time_budget_s=30.0)
+    return options
+
+
+def build_trace(n_requests: int, *, seed: int = 0) -> list[dict]:
+    """The deterministic replay trace: a list of request descriptors.
+
+    ``{"kernel", "hops", "tenant", "burst"}`` per request. Kernel choice is
+    zipf-skewed (weight 1/rank), tenants rotate, arrivals are grouped into
+    bursts of 2..6, and the second half of the trace draws ``hops=1``
+    variants with probability 1/2 (the speculator's neighbor axis).
+    """
+    kernels = ["bitcount", "fft", "crc32"]   # zipf ranks 1..3
+    weights = [1.0 / r for r in range(1, len(kernels) + 1)]
+    tenants = ["tenant-a", "tenant-b", "tenant-c"]
+    rng = random.Random(seed)
+    trace: list[dict] = []
+    burst = 0
+    burst_left = rng.randint(2, 6)
+    for i in range(n_requests):
+        if burst_left == 0:
+            burst += 1
+            burst_left = rng.randint(2, 6)
+        burst_left -= 1
+        hops = 1 if (i >= n_requests // 2 and rng.random() < 0.5) else 0
+        trace.append({
+            "kernel": rng.choices(kernels, weights=weights)[0],
+            "hops": hops,
+            "tenant": tenants[i % len(tenants)],
+            "burst": burst,
+        })
+    return trace
+
+
+def _replay(socket_path: str, trace: list[dict], dfgs: dict, *,
+            lanes: int = 4, burst_gap_s: float = 0.0) -> dict:
+    """Replay ``trace`` through the daemon socket, bursts concurrent.
+
+    Each burst's requests run concurrently across ``lanes`` persistent
+    client connections (requests on one lane serialize, like a real client
+    process); ``burst_gap_s`` idles between bursts — the speculator's
+    window. Returns client-observed latencies and failure counts.
+    """
+    from repro.core.daemon import DaemonClient
+
+    clients = [DaemonClient(socket_path) for _ in range(lanes)]
+    latencies_ms: list[float] = []
+    rows: list[dict] = []
+    lock = threading.Lock()
+    failures = 0
+
+    def lane_run(client, items):
+        nonlocal failures
+        for it in items:
+            t0 = time.perf_counter()
+            row = client.compile(
+                dfgs[it["kernel"]], tenant=it["tenant"],
+                options={"max_route_hops": it["hops"]} if it["hops"] else None)
+            dt_ms = (time.perf_counter() - t0) * 1e3
+            with lock:
+                latencies_ms.append(dt_ms)
+                rows.append(row)
+                if not row["ok"]:
+                    failures += 1
+
+    try:
+        bursts: list[list[dict]] = []
+        for it in trace:
+            if not bursts or bursts[-1][0]["burst"] != it["burst"]:
+                bursts.append([])
+            bursts[-1].append(it)
+        for burst in bursts:
+            threads = []
+            for lane in range(min(lanes, len(burst))):
+                items = burst[lane::lanes]
+                t = threading.Thread(
+                    target=lane_run, args=(clients[lane], items))
+                t.start()
+                threads.append(t)
+            for t in threads:
+                t.join()
+            if burst_gap_s:
+                time.sleep(burst_gap_s)
+    finally:
+        for c in clients:
+            c.close()
+
+    sources = {"memory": 0, "disk": 0, "solve": 0}
+    speculative_hits = 0
+    for row in rows:
+        if row["ok"]:
+            sources[row["source"]] = sources.get(row["source"], 0) + 1
+            if row["service"].get("speculative"):
+                speculative_hits += 1
+    n_ok = len(rows) - failures
+    warm = sources["memory"] + sources["disk"]
+    return {
+        "requests": len(rows),
+        "failures": failures,
+        "p50_ms": round(percentile(latencies_ms, 50), 3),
+        "p99_ms": round(percentile(latencies_ms, 99), 3),
+        "max_ms": round(max(latencies_ms), 3) if latencies_ms else 0.0,
+        "sources": sources,
+        "warm_hit_rate": round(warm / n_ok, 6) if n_ok else None,
+        "speculative_hits": speculative_hits,
+    }
+
+
+def _run_session(options, trace, dfgs, tmp, *, speculate: bool,
+                 burst_gap_s: float, warm_replay: bool) -> dict:
+    """One daemon session: cold replay, optional warm replay, stats."""
+    from repro.core.cgra import CGRA
+    from repro.core.daemon import CompileDaemon, DaemonServer
+    from repro.core.mapper import clear_mapping_cache
+
+    tag = "speculate" if speculate else "no_speculate"
+    cache_dir = os.path.join(tmp, f"cache-{tag}")
+    socket_path = os.path.join(tmp, f"{tag}.sock")
+    # fresh caches per session or the A/B comparison measures the other
+    # session's leftovers: new disk dir + cleared process-wide memory LRU
+    clear_mapping_cache()
+    daemon = CompileDaemon(
+        CGRA(4, 4), options, workers=2, queue_limit=256,
+        speculate=speculate, cache_dir=cache_dir)
+    server = DaemonServer(daemon, socket_path)
+    server.start()
+    try:
+        cold = _replay(socket_path, trace, dfgs, burst_gap_s=burst_gap_s)
+        out = {"cold": cold}
+        if warm_replay:
+            # every key is now cached (by the cold replay or the speculator):
+            # this replay IS the warm-latency measurement CI gates
+            out["warm"] = _replay(socket_path, trace, dfgs, burst_gap_s=0.0)
+        out["daemon"] = daemon.stats_dict()
+        return out
+    finally:
+        server.stop()
+
+
+def _overload_probe(options, dfgs, tmp) -> dict:
+    """Deterministic admission-control probe: 1 worker, queue limit 1, one
+    concurrent burst of distinct cold requests — the overflow must shed as
+    ``overloaded``, everything must answer, the daemon must survive."""
+    from repro.core.cgra import CGRA
+    from repro.core.daemon import CompileDaemon, DaemonClient, DaemonServer
+    from repro.core.mapper import clear_mapping_cache
+
+    clear_mapping_cache()
+    socket_path = os.path.join(tmp, "overload.sock")
+    daemon = CompileDaemon(
+        CGRA(4, 4), options, workers=1, queue_limit=1, speculate=False,
+        cache_dir=os.path.join(tmp, "cache-overload"))
+    server = DaemonServer(daemon, socket_path)
+    server.start()
+    # distinct (kernel, hops) combos -> distinct coalesce keys, all cold
+    probes = [(k, h) for k in ("crc32", "fft") for h in range(4)]
+    results: list[dict] = []
+    lock = threading.Lock()
+
+    def one(kernel: str, hops: int):
+        with DaemonClient(socket_path) as c:
+            row = c.compile(dfgs[kernel],
+                            options={"max_route_hops": hops} if hops else None)
+        with lock:
+            results.append(row)
+
+    try:
+        threads = [threading.Thread(target=one, args=p) for p in probes]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        hung = any(t.is_alive() for t in threads)
+        shed = sum(r["failure"] == "overloaded" for r in results)
+        ok = sum(r["ok"] for r in results)
+        with DaemonClient(socket_path) as c:
+            alive_after = c.ping()
+        return {
+            "total": len(probes),
+            "answered": len(results),
+            "ok": ok,
+            "shed": shed,
+            "shed_rate": round(shed / len(probes), 6),
+            "other_failures": len(results) - ok - shed,
+            "hung": hung,
+            "alive_after": alive_after,
+        }
+    finally:
+        server.stop()
+
+
+def run(options=None, *, smoke: bool = False) -> dict:
+    """The whole service bench; returns the ``BENCH_service.json`` payload."""
+    from repro.api import resolve_options
+    from repro.core.benchsuite import load_suite
+
+    options = _bench_options(options if options is not None
+                             else resolve_options("fast"))
+    dfgs = load_suite(names=["bitcount", "fft", "crc32"])
+    n_requests = 60 if smoke else 240
+    trace = build_trace(n_requests, seed=0)
+    # the idle gap between bursts is the speculator's window; 150 ms covers
+    # a few neighbor warms of millisecond-scale kernels with margin
+    burst_gap_s = 0.15
+
+    with tempfile.TemporaryDirectory(prefix="repro-bench-service-") as tmp:
+        spec = _run_session(options, trace, dfgs, tmp, speculate=True,
+                            burst_gap_s=burst_gap_s, warm_replay=True)
+        nospec = _run_session(options, trace, dfgs, tmp, speculate=False,
+                              burst_gap_s=burst_gap_s, warm_replay=False)
+        overload = _overload_probe(options, dfgs, tmp)
+
+    warm = spec["warm"]
+    spec_rate = spec["cold"]["warm_hit_rate"] or 0.0
+    nospec_rate = nospec["cold"]["warm_hit_rate"] or 0.0
+    gates = {
+        # CI acceptance gates (ci.yml bench-smoke); keep keys stable
+        "warm_p99_ms_le_50": warm["p99_ms"] <= 50.0,
+        "speculative_lift": (
+            spec["cold"]["speculative_hits"] >= 1
+            and spec_rate > nospec_rate
+        ),
+        "shed_overloaded": (
+            overload["shed"] >= 1
+            and overload["other_failures"] == 0
+            and overload["answered"] == overload["total"]
+            and not overload["hung"]
+            and overload["alive_after"]
+        ),
+        "no_failures": (spec["cold"]["failures"] == 0
+                        and warm["failures"] == 0
+                        and nospec["cold"]["failures"] == 0),
+    }
+    return {
+        "smoke": smoke,
+        "profile": options.profile,
+        "options": options.as_dict(),
+        "trace": {
+            "requests": n_requests,
+            "kernels": sorted(dfgs),
+            "tenants": sorted({t["tenant"] for t in trace}),
+            "bursts": trace[-1]["burst"] + 1,
+            "hops_variants": sorted({t["hops"] for t in trace}),
+            "burst_gap_s": burst_gap_s,
+            "seed": 0,
+        },
+        "warm_p50_ms": warm["p50_ms"],
+        "warm_p99_ms": warm["p99_ms"],
+        "shed_rate": overload["shed_rate"],
+        "speculate": spec,
+        "no_speculate": nospec,
+        "overload": overload,
+        "gates": gates,
+    }
+
+
+def summarize(report: dict) -> list[str]:
+    spec, nospec = report["speculate"], report["no_speculate"]
+    lines = [
+        f"trace: {report['trace']['requests']} requests, "
+        f"{report['trace']['bursts']} bursts, "
+        f"kernels {','.join(report['trace']['kernels'])}",
+        f"warm latency: p50 {report['warm_p50_ms']:.2f}ms "
+        f"p99 {report['warm_p99_ms']:.2f}ms",
+        f"cold hit rate: {spec['cold']['warm_hit_rate']} with speculation "
+        f"({spec['cold']['speculative_hits']} speculative hits) vs "
+        f"{nospec['cold']['warm_hit_rate']} without",
+        f"overload probe: {report['overload']['shed']}/"
+        f"{report['overload']['total']} shed as overloaded, "
+        f"alive_after={report['overload']['alive_after']}",
+        "gates: " + ", ".join(
+            f"{k}={'PASS' if v else 'FAIL'}"
+            for k, v in report["gates"].items()),
+    ]
+    return lines
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from repro.api import add_cli_args, options_from_args
+
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.bench_service",
+        description="Compile-daemon load test (emits BENCH_service.json).")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized trace (60 requests instead of 240)")
+    ap.add_argument("--out", default="BENCH_service.json",
+                    help="artifact path (default BENCH_service.json)")
+    add_cli_args(ap)
+    args = ap.parse_args(argv)
+    report = run(options_from_args(args), smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for line in summarize(report):
+        print("SERVICE:", line)
+    print(f"wrote {os.path.abspath(args.out)}")
+    return 0 if all(report["gates"].values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

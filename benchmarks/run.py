@@ -7,6 +7,9 @@
              execute_mapping capability verification (DESIGN.md §10)
   scale    — one kernel at 4x4..100x100 per space backend (exact vs
              anneal), execution-verified, with utilization (DESIGN.md §13)
+  service  — compile-daemon load test: zipf/bursty/mixed-tenant trace over
+             the unix socket, warm p50/p99 latency, admission-control sheds,
+             speculative-premapping lift (DESIGN.md §16)
 
 Each section also emits a ``BENCH_<name>.json`` artifact (consumed by CI and
 by the Fig. 5 near-flat acceptance gate) and prints a
@@ -42,7 +45,8 @@ def main(argv=None) -> None:
     )
     ap.add_argument("--skip-joint", action="store_true")
     ap.add_argument("--only",
-                    choices=["table3", "fig5", "kernels", "hetero", "scale"])
+                    choices=["table3", "fig5", "kernels", "hetero", "scale",
+                             "service"])
     add_cli_args(ap)          # --jobs/--cache-dir/--profile/--arch/... (api)
     args = ap.parse_args(argv)
     if args.smoke:
@@ -151,6 +155,19 @@ def _run_sections(args, options) -> None:
                     f"II={r['ii']};verified={r['verified']};occupancy={occ}",
                 )
             )
+
+    if args.only in (None, "service"):
+        from benchmarks import bench_service
+
+        vrep = bench_service.run(options=options, smoke=args.quick)
+        with open("BENCH_service.json", "w") as f:
+            json.dump(vrep, f, indent=2)
+        for line in bench_service.summarize(vrep):
+            print("SERVICE:", line)
+        csv_rows.append(
+            ("service_warm_p99", vrep["warm_p99_ms"] * 1e3,
+             f"p50_ms={vrep['warm_p50_ms']};shed_rate={vrep['shed_rate']};"
+             f"spec_hits={vrep['speculate']['cold']['speculative_hits']}"))
 
     if args.only in (None, "kernels"):
         krows = bench_kernels.run()

@@ -125,6 +125,7 @@ class CompileOptions:
     jobs: int | None = None             # batch workers (None = os.cpu_count())
     deadline_s: float | None = None     # per-job wall budget in compile_batch
     racing_workers: int = 1             # compile_racing default worker count
+    tenant: str | None = None           # daemon tenant label (provenance, §16)
     # ------------------------------------------------- exact certification
     exact_check: bool = False           # certify/improve each result (§14)
     exact_budget_s: float = 20.0        # wall budget per certification sweep

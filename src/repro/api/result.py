@@ -13,7 +13,13 @@ Failure codes (:data:`FAILURE_KINDS`):
 * ``infeasible`` — structurally impossible (an op class with no capable PE);
 * ``budget-exhausted`` — the wall/step budget ran out before a mapping;
 * ``search-exhausted`` — the whole (II, slack) space was proven empty;
-* ``cancelled`` — cooperative cancellation (service stop event);
+* ``cancelled`` — cooperative cancellation (service stop event, or a
+  daemon request whose deadline expired while still queued);
+* ``overloaded`` — shed by daemon admission control before any solving
+  (queue full / deadline budget exceeded, DESIGN.md §16.2) — the caller
+  should back off and retry;
+* ``worker-lost`` — a pool worker died mid-solve and the job could not be
+  recovered after the one pool respawn (DESIGN.md §8.1);
 * ``error`` — the compile raised (bad DFG, worker death, cache I/O);
 * ``unknown`` — anything the classifier cannot attribute.
 """
@@ -46,6 +52,8 @@ FAILURE_KINDS = (
     "budget-exhausted",
     "search-exhausted",
     "cancelled",
+    "overloaded",
+    "worker-lost",
     "error",
     "unknown",
 )
@@ -70,6 +78,10 @@ def classify_failure(ok: bool, reason: str, cancelled: bool = False) -> str | No
     if cancelled:
         return "cancelled"
     r = reason or ""
+    if r.startswith("overloaded"):
+        return "overloaded"
+    if r.startswith("worker lost"):
+        return "worker-lost"
     if r.startswith("infeasible"):
         return "infeasible"
     if "search space exhausted" in r:
@@ -216,6 +228,10 @@ class CompileResult:
     route_movs: int = 0
     #: optional ``simulate.utilization_report`` block (opt-in, see compile CLI)
     utilization: dict | None = None
+    #: optional daemon/service provenance block (DESIGN.md §16.4): tenant,
+    #: deadline, queue wait, coalescing and speculative-warm attribution —
+    #: set only by the compile daemon, absent from in-process rows
+    service: dict | None = None
     #: certified optimal II (exact-check runs; None = not proven / not run)
     ii_opt: int | None = None
     #: optimality certificate dict (``exact_backends.Certificate.as_dict``,
@@ -412,6 +428,10 @@ class CompileResult:
         }
         if self.utilization is not None:
             row["utilization"] = self.utilization
+        if self.service is not None:
+            # daemon rows only (DESIGN.md §16.4): tenant/deadline/queue/
+            # coalescing provenance; plain compiles keep the historical shape
+            row["service"] = self.service
         if self.certificate is not None:
             # exact-check rows (DESIGN.md §14.4): the certified-optimal II
             # (None while status is "timeout") next to the full certificate

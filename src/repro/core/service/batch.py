@@ -24,6 +24,7 @@ from __future__ import annotations
 import os
 import time as _time
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
+from concurrent.futures.process import BrokenProcessPool
 from dataclasses import dataclass, field
 from typing import Sequence
 
@@ -360,42 +361,77 @@ def compile_many(
     ctx = mp.get_context()
     stop_event = ctx.Event()
     reports_by_idx: dict[int, JobReport] = {}
-    with ProcessPoolExecutor(
-        max_workers=min(num_workers, len(batch)),
-        mp_context=ctx,
-        initializer=_pool_init,
-        initargs=(stop_event,),
-    ) as pool:
-        futures = {pool.submit(_run_job_pooled, job, defaults, trace_dir): i
-                   for i, job in enumerate(batch)}
-        pending = set(futures)
-        # poll only when there is a cancel event to observe; block otherwise
-        poll_s = 0.1 if cancel is not None else None
-        while pending:
-            done, pending = wait(pending, timeout=poll_s,
-                                 return_when=FIRST_COMPLETED)
-            for fut in done:
-                i = futures[fut]
-                if fut.cancelled():
-                    reports_by_idx[i] = _cancelled_report(
-                        batch[i], "cancelled before start")
-                    continue
-                try:
-                    reports_by_idx[i] = fut.result()
-                except Exception as exc:
-                    # worker death (BrokenProcessPool after an OOM kill,
-                    # pickling failure, ...) fails this row, not the batch
-                    reports_by_idx[i] = JobReport(
-                        name=batch[i].name, ok=False, ii=None, m_ii=-1,
-                        wall_s=0.0, reason=f"{type(exc).__name__}: {exc}")
-            if cancel is not None and cancel.is_set() and not stop_event.is_set():
-                stop_event.set()
-                for fut in list(pending):
-                    if fut.cancel():
-                        i = futures[fut]
+    # Worker-loss recovery (DESIGN.md §8.1): an abruptly dead worker (OOM
+    # kill, segfault in a C extension, os._exit) breaks the WHOLE executor —
+    # every pending future raises BrokenProcessPool, including jobs that
+    # never ran. Treat those jobs as *unfinished* rather than failed, respawn
+    # the pool once and rerun them; a second break (the culprit job rides
+    # along on the retry) fails whatever is still unfinished with a
+    # machine-readable ``worker lost`` reason (failure code "worker-lost")
+    # instead of wedging or over-failing the batch.
+    remaining = set(range(len(batch)))
+    respawns_left = 1
+    while remaining:
+        broken = False
+        with ProcessPoolExecutor(
+            max_workers=min(num_workers, len(remaining)),
+            mp_context=ctx,
+            initializer=_pool_init,
+            initargs=(stop_event,),
+        ) as pool:
+            futures = {
+                pool.submit(_run_job_pooled, batch[i], defaults, trace_dir): i
+                for i in sorted(remaining)
+            }
+            pending = set(futures)
+            # poll only when there is a cancel event to observe; block otherwise
+            poll_s = 0.1 if cancel is not None else None
+            while pending:
+                done, pending = wait(pending, timeout=poll_s,
+                                     return_when=FIRST_COMPLETED)
+                for fut in done:
+                    i = futures[fut]
+                    if fut.cancelled():
                         reports_by_idx[i] = _cancelled_report(
                             batch[i], "cancelled before start")
-                        pending.discard(fut)
+                        remaining.discard(i)
+                        continue
+                    try:
+                        reports_by_idx[i] = fut.result()
+                        remaining.discard(i)
+                    except BrokenProcessPool:
+                        # unfinished, not failed: candidates for the respawn
+                        broken = True
+                    except Exception as exc:
+                        # per-job failure crossing the boundary (pickling
+                        # error, ...) fails this row, not the batch
+                        reports_by_idx[i] = JobReport(
+                            name=batch[i].name, ok=False, ii=None, m_ii=-1,
+                            wall_s=0.0, reason=f"{type(exc).__name__}: {exc}")
+                        remaining.discard(i)
+                if broken:
+                    break
+                if (cancel is not None and cancel.is_set()
+                        and not stop_event.is_set()):
+                    stop_event.set()
+                    for fut in list(pending):
+                        if fut.cancel():
+                            i = futures[fut]
+                            reports_by_idx[i] = _cancelled_report(
+                                batch[i], "cancelled before start")
+                            remaining.discard(i)
+                            pending.discard(fut)
+        if broken:
+            if respawns_left > 0:
+                respawns_left -= 1
+                continue
+            for i in sorted(remaining):
+                reports_by_idx[i] = JobReport(
+                    name=batch[i].name, ok=False, ii=None, m_ii=-1,
+                    wall_s=0.0,
+                    reason="worker lost: process pool broken twice "
+                           "(worker died mid-solve; pool respawned once)")
+            remaining.clear()
     reports = [reports_by_idx[i] for i in range(len(batch))]
     return CompileReport(reports, _time.perf_counter() - t0,
                          min(num_workers, len(batch)))

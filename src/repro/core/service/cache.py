@@ -29,6 +29,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import time as _time
 from dataclasses import dataclass, field
 
 # Bump whenever the entry payload schema or the key schema changes: old
@@ -60,6 +61,7 @@ class CacheStats:
     misses: int = 0
     writes: int = 0
     corrupt_dropped: int = 0
+    evictions: int = 0
 
     def as_dict(self) -> dict:
         return {
@@ -67,6 +69,7 @@ class CacheStats:
             "misses": self.misses,
             "writes": self.writes,
             "corrupt_dropped": self.corrupt_dropped,
+            "evictions": self.evictions,
         }
 
 
@@ -235,16 +238,31 @@ class DiskMappingCache:
                 pass
 
     # ------------------------------------------------------------- maintenance
-    def prune(self) -> int:
-        """Delete stale files: version-mismatched entries and orphaned temps.
+    def prune(
+        self, max_bytes: int | None = None, max_age_s: float | None = None,
+    ) -> int:
+        """Delete stale files and (optionally) bound the store's size/age.
 
-        Version-bumped entries are unreachable anyway (the digest changed);
-        this just reclaims the disk. Orphaned ``*.tmp.<pid>`` files (a writer
-        killed between open and replace) are also removed — an in-flight
-        concurrent write losing its temp merely skips that best-effort write.
-        Returns the number of files removed.
+        Always removes version-mismatched entries and orphaned ``*.tmp.<pid>``
+        files (a writer killed between open and replace) — version-bumped
+        entries are unreachable anyway (the digest changed), so this just
+        reclaims the disk. An in-flight concurrent write losing its temp
+        merely skips that best-effort write.
+
+        With ``max_age_s``, entries whose mtime is older than that many
+        seconds are evicted. With ``max_bytes``, surviving entries are
+        evicted LRU-by-mtime (oldest first) until the store fits the budget
+        — ``os.replace`` on a read path never touches mtime, so mtime order
+        is write/refresh order, the same approximation a long-running daemon
+        wants for "least recently produced". Evictions are counted in
+        ``stats.evictions`` (mirroring the in-memory LRU's counter); stale/
+        corrupt removals stay out of that counter. Returns the total number
+        of files removed. All removals are best-effort: a concurrently
+        deleted file is not an error.
         """
         removed = 0
+        now = _time.time()
+        survivors: list[tuple[float, int, str]] = []  # (mtime, size, path)
         for dirpath, _dirnames, filenames in os.walk(self.root):
             for fn in filenames:
                 path = os.path.join(dirpath, fn)
@@ -269,7 +287,33 @@ class DiskMappingCache:
                         removed += 1
                     except OSError:
                         pass
+                    continue
+                try:
+                    st = os.stat(path)
+                except OSError:
+                    continue
+                if max_age_s is not None and now - st.st_mtime > max_age_s:
+                    if self._evict(path):
+                        removed += 1
+                    continue
+                survivors.append((st.st_mtime, st.st_size, path))
+        if max_bytes is not None:
+            total = sum(size for _mt, size, _p in survivors)
+            for _mtime, size, path in sorted(survivors):
+                if total <= max_bytes:
+                    break
+                if self._evict(path):
+                    removed += 1
+                    total -= size
         return removed
+
+    def _evict(self, path: str) -> bool:
+        try:
+            os.unlink(path)
+        except OSError:
+            return False
+        self.stats.evictions += 1
+        return True
 
     def __len__(self) -> int:
         count = 0

@@ -15,6 +15,12 @@ persistent mapping cache (``--cache-dir`` / ``$REPRO_CACHE_DIR``). A warm
 restart then
 boots without re-solving a single mapping — the production pattern the
 service layer exists for (DESIGN.md §8).
+
+For a long-lived serving node, the persistent compile daemon supersedes
+one-shot premapping: ``python -m repro.daemon serve`` keeps the warmed
+session resident behind a unix socket, with admission control and idle
+speculative premapping of neighboring option variants (DESIGN.md §16).
+``--premap-kernels`` remains the right tool for a single cold boot.
 """
 
 from __future__ import annotations
@@ -85,7 +91,8 @@ def main(argv=None):
     ap.add_argument(
         "--premap-kernels", type=int, default=0, metavar="SIZE",
         help="before serving, batch-compile the CGRA kernel suite onto a "
-             "SIZE×SIZE grid (0 = skip)",
+             "SIZE×SIZE grid (0 = skip); for a resident warm session use "
+             "`python -m repro.daemon serve` instead (DESIGN.md §16)",
     )
     ap.add_argument("--premap-jobs", type=int, default=2)
     ap.add_argument(

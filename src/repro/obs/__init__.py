@@ -46,6 +46,7 @@ __all__ = [
     "event",
     "get_tracer",
     "incr",
+    "install_tracer",
     "merge_shards",
     "session",
     "span",
@@ -200,6 +201,36 @@ class Tracer:
         with self._lock:
             self.events.extend(events)
 
+    def drain(self) -> list[dict]:
+        """Atomically take (and clear) the accumulated events.
+
+        The rotation primitive for unbounded-lifetime sessions (the compile
+        daemon, DESIGN.md §16.5): the caller serializes each drained segment
+        to its own Chrome-JSON file so the in-memory event list never grows
+        for the life of the process. Counters are cumulative and are NOT
+        cleared — they describe the session, not the segment.
+        """
+        with self._lock:
+            events, self.events = self.events, []
+        return events
+
+    def write_segment(self, path: str, events: list[dict]) -> None:
+        """Write one drained segment as a standalone Chrome trace document
+        (same schema as :meth:`write`, so ``tools/trace_report.py`` loads
+        rotated daemon segments and one-shot CLI traces identically)."""
+        pids = sorted({e["pid"] for e in events} | {self.pid})
+        meta = [{
+            "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+            "args": {"name": self.process_name if pid == self.pid
+                     else f"worker-{pid}"},
+        } for pid in pids]
+        doc = {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+        with self._lock:
+            if self.counters:
+                doc["otherData"] = {"counters": dict(self.counters)}
+        with open(path, "w") as f:
+            json.dump(doc, f)
+
     # -- serialization ----------------------------------------------------
     def metadata_events(self) -> list[dict]:
         pids = sorted({e["pid"] for e in self.events} | {self.pid})
@@ -261,6 +292,19 @@ def incr(name: str, n: int = 1) -> None:
     t = _ACTIVE
     if t is not None:
         t.incr(name, n)
+
+
+def install_tracer(tracer: "Tracer | None") -> "Tracer | None":
+    """Install ``tracer`` as the process-global tracer; return the previous.
+
+    The non-scoped variant of :func:`tracing` for callers whose lifetime is
+    not a ``with`` block — the compile daemon installs its session tracer at
+    start and restores the previous one at shutdown (DESIGN.md §16.5).
+    """
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = tracer
+    return prev
 
 
 @contextmanager

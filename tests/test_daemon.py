@@ -1,0 +1,308 @@
+"""Compile-daemon tests (DESIGN.md §16): admission control, stampede
+coalescing, per-tenant deadlines, the unix-socket NDJSON protocol,
+speculative-premapping attribution, and trace rotation.
+
+The deterministic concurrency tests exploit one lifecycle property of
+:class:`CompileDaemon`: requests submitted before ``start()`` are admitted
+(queued / coalesced / shed by exactly the production code paths) but nothing
+runs until the workers spawn — so a test can build any queue state it wants,
+race-free, then release it."""
+
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import CGRA, running_example
+from repro.core.benchsuite import load_suite
+from repro.core.daemon import (
+    CompileDaemon,
+    DaemonClient,
+    DaemonError,
+    DaemonServer,
+    neighbor_options,
+)
+from repro.core.mapper import clear_mapping_cache
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memory_cache():
+    clear_mapping_cache()
+    yield
+    clear_mapping_cache()
+
+
+def _daemon(tmp_path=None, **kw):
+    kw.setdefault("workers", 2)
+    cache_dir = str(tmp_path / "cache") if tmp_path is not None else None
+    return CompileDaemon(CGRA(4, 4), "fast", cache_dir=cache_dir, **kw)
+
+
+# ------------------------------------------------------------ basic serving
+
+def test_daemon_compiles_and_stamps_service_block(tmp_path):
+    with _daemon(tmp_path) as d:
+        row = d.submit(running_example(), tenant="t0").wait(timeout=60)
+    assert row["ok"] and row["failure"] is None
+    svc = row["service"]
+    assert svc["tenant"] == "t0" and svc["coalesced"] is False
+    assert svc["queue_s"] >= 0
+    # provenance also lands next to the cache layer hit rates (§16.4)
+    assert row["metrics"]["cache"]["speculative"] is False
+
+
+def test_daemon_warm_path_is_memory_hit(tmp_path):
+    with _daemon(tmp_path) as d:
+        cold = d.submit(running_example()).wait(timeout=60)
+        warm = d.submit(running_example()).wait(timeout=60)
+    assert cold["source"] == "solve" and warm["source"] == "memory"
+    assert warm["ii"] == cold["ii"]
+    assert d.stats.solves == 1 and d.stats.warm_memory == 1
+
+
+def test_stop_cancels_queued_requests():
+    d = _daemon()            # never started: requests stay queued
+    t1 = d.submit(running_example())
+    d.stop()
+    row = t1.wait(timeout=5)
+    assert row is not None and row["failure"] == "cancelled"
+    # a daemon that is stopping sheds new submits rather than hanging them
+    t2 = d.submit(running_example())
+    assert t2.wait(timeout=5)["failure"] == "overloaded"
+
+
+# ------------------------------------------------------- stampede coalescing
+
+def test_identical_concurrent_submits_coalesce_to_one_solve(tmp_path):
+    n = 6
+    d = _daemon(tmp_path)
+    tickets = [d.submit(running_example(), tenant=f"t{i}") for i in range(n)]
+    assert d.stats.coalesced == n - 1      # one leader, n-1 followers
+    d.start()
+    try:
+        rows = [t.wait(timeout=60) for t in tickets]
+    finally:
+        d.stop()
+    assert all(r is not None and r["ok"] for r in rows)
+    assert d.stats.solves == 1             # the stampede cost ONE solve
+    assert [r["service"]["coalesced"] for r in rows].count(True) == n - 1
+    # every follower keeps its own tenant attribution
+    assert sorted(r["service"]["tenant"] for r in rows) == sorted(
+        f"t{i}" for i in range(n))
+    assert {r["ii"] for r in rows} == {rows[0]["ii"]}
+
+
+def test_different_options_do_not_coalesce(tmp_path):
+    d = _daemon(tmp_path)
+    d.submit(running_example())
+    d.submit(running_example(), max_route_hops=1)   # different mapper options
+    assert d.stats.coalesced == 0
+    d.stop()
+
+
+# --------------------------------------------------------- admission control
+
+def test_queue_full_sheds_with_overloaded_code():
+    d = _daemon(queue_limit=2)   # never started: the queue cannot drain
+    dfgs = load_suite(names=["bitcount", "fft", "crc32"])
+    t1 = d.submit(dfgs["bitcount"])
+    t2 = d.submit(dfgs["fft"])
+    t3 = d.submit(dfgs["crc32"])           # queue full -> shed immediately
+    assert not t1.done and not t2.done
+    assert t3.done                          # sheds resolve without a worker
+    row = t3.wait(timeout=1)
+    assert row["ok"] is False
+    assert row["failure"] == "overloaded"
+    assert row["reason"].startswith("overloaded: queue full")
+    assert d.stats.shed == 1
+    d.stop()
+
+
+def test_deadline_budget_admission_sheds_hopeless_requests():
+    d = _daemon(queue_limit=100)
+    d._ewma_service_s = 10.0               # pretend solves take 10s
+    d.submit(running_example())            # one queued request ahead
+    t = d.submit(running_example(), deadline_s=0.5, max_route_hops=2)
+    row = t.wait(timeout=1)
+    assert row["failure"] == "overloaded"
+    assert "deadline budget exceeded" in row["reason"]
+    d.stop()
+
+
+def test_deadline_expired_in_queue_returns_cancelled_without_solving():
+    d = _daemon(workers=1)
+    t = d.submit(running_example(), deadline_s=0.05, tenant="late")
+    time.sleep(0.15)                       # burn the deadline while queued
+    d.start()
+    try:
+        row = t.wait(timeout=10)
+    finally:
+        d.stop()
+    assert row["ok"] is False and row["cancelled"] is True
+    assert row["failure"] == "cancelled"
+    assert "deadline expired in queue" in row["reason"]
+    # the mapper never ran: no solver work, no cache consultation
+    assert row["trace"]["windows_opened"] == 0
+    assert d.stats.cancelled_in_queue == 1 and d.stats.solves == 0
+
+
+# ------------------------------------------------------ speculative premapping
+
+def test_neighbor_options_variants():
+    from repro.api import resolve_options
+
+    opts = resolve_options("fast", max_route_hops=1,
+                           max_register_pressure=2)
+    variants = neighbor_options(opts)
+    hops = sorted(v.max_route_hops for v in variants)
+    assert hops == [0, 1, 2]       # hops-1, relaxed-pressure (hops=1), hops+1
+    assert any(v.max_register_pressure is None for v in variants)
+    # hops=0 has no hops-1 neighbor
+    assert sorted(v.max_route_hops
+                  for v in neighbor_options(resolve_options("fast"))) == [1]
+
+
+def test_speculative_warm_is_attributed(tmp_path):
+    with _daemon(tmp_path, workers=1) as d:
+        first = d.submit(running_example()).wait(timeout=60)
+        assert first["ok"] and first["service"]["speculative"] is False
+        deadline = time.time() + 20
+        while d.stats.speculative_warms < 1:    # idle thread premaps hops=1
+            assert time.time() < deadline, "speculator never warmed"
+            time.sleep(0.05)
+        row = d.submit(running_example(), max_route_hops=1).wait(timeout=60)
+    assert row["ok"]
+    assert row["source"] in ("memory", "disk")  # served from a warmed layer
+    assert row["service"]["speculative"] is True
+    assert row["metrics"]["cache"]["speculative"] is True
+    assert d.stats.speculative_hits == 1
+
+
+def test_deterministic_options_disable_speculation(tmp_path):
+    d = CompileDaemon(CGRA(4, 4), "deterministic-ci", workers=1)
+    assert d.speculate is False     # deterministic mapper bypasses caches
+    d.stop()
+
+
+# ------------------------------------------------------------ socket protocol
+
+def test_socket_round_trip_and_error_isolation(tmp_path):
+    sock = str(tmp_path / "d.sock")
+    daemon = _daemon(tmp_path)
+    server = DaemonServer(daemon, sock)
+    server.start()
+    try:
+        with DaemonClient(sock) as c:
+            assert c.ping()
+            row = c.compile(running_example(), tenant="sock",
+                            deadline_s=30.0,
+                            options={"max_route_hops": 1})
+            assert row["ok"] and row["service"]["tenant"] == "sock"
+            assert row["service"]["deadline_s"] == 30.0
+            # a bad request errors this line only; the connection survives
+            with pytest.raises(DaemonError):
+                c.request({"op": "no-such-op"})
+            with pytest.raises(DaemonError):
+                c.request({"op": "compile", "dfg": {"bogus": True}})
+            assert c.ping()
+            stats = c.stats()
+            assert stats["completed"] == 1 and stats["failed"] == 0
+        with DaemonClient(sock) as c2:
+            assert c2.shutdown()
+        assert server._shutdown_requested.wait(timeout=5)
+    finally:
+        server.stop()
+    assert not os.path.exists(sock)     # clean shutdown unlinks the socket
+
+
+def test_socket_concurrent_clients_coalesce(tmp_path):
+    sock = str(tmp_path / "d.sock")
+    daemon = _daemon(tmp_path, workers=1)
+    server = DaemonServer(daemon, sock)
+    server.start()
+    rows, lock = [], threading.Lock()
+
+    def one(i):
+        with DaemonClient(sock) as c:
+            row = c.compile(running_example(), tenant=f"c{i}")
+        with lock:
+            rows.append(row)
+
+    try:
+        threads = [threading.Thread(target=one, args=(i,)) for i in range(5)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not any(t.is_alive() for t in threads)
+    finally:
+        server.stop()
+    assert len(rows) == 5 and all(r["ok"] for r in rows)
+    # identical concurrent requests through the socket still solve once
+    assert daemon.stats.solves == 1
+
+
+def test_stale_socket_file_is_reclaimed(tmp_path):
+    sock = str(tmp_path / "stale.sock")
+    with open(sock, "w"):
+        pass                      # a crashed daemon's leftover path
+    daemon = _daemon(tmp_path)
+    server = DaemonServer(daemon, sock)
+    server.start()
+    try:
+        with DaemonClient(sock) as c:
+            assert c.ping()
+    finally:
+        server.stop()
+
+
+# -------------------------------------------------------------- trace rotation
+
+def test_trace_rotation_writes_loadable_segments(tmp_path):
+    trace_dir = str(tmp_path / "traces")
+    with _daemon(tmp_path, trace_dir=trace_dir, rotate_every=2) as d:
+        for hops in (0, 1, 0, 1):
+            assert d.submit(running_example(),
+                            max_route_hops=hops).wait(timeout=60)["ok"]
+    segments = sorted(os.listdir(trace_dir))
+    assert len(segments) >= 2          # 4 requests / rotate_every=2, + final
+    names = set()
+    for fn in segments:
+        with open(os.path.join(trace_dir, fn)) as f:
+            doc = json.load(f)
+        assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+        names |= {e["name"] for e in doc["traceEvents"]}
+    assert "daemon.request" in names   # per-request spans (§16.5)
+    assert "compile" in names          # nested pipeline spans rotated too
+
+
+def test_trace_report_reads_daemon_segments(tmp_path):
+    import subprocess
+    import sys
+
+    trace_dir = str(tmp_path / "traces")
+    with _daemon(tmp_path, trace_dir=trace_dir, rotate_every=100) as d:
+        assert d.submit(running_example()).wait(timeout=60)["ok"]
+    segments = os.listdir(trace_dir)
+    assert segments
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(repo, "tools", "trace_report.py"),
+         "--check", os.path.join(trace_dir, sorted(segments)[0])],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ------------------------------------------------------------- cache pruning
+
+def test_daemon_prunes_disk_cache_during_idle_maintenance(tmp_path):
+    d = _daemon(tmp_path, workers=1, cache_max_bytes=1, prune_every=1)
+    with d:
+        assert d.submit(running_example()).wait(timeout=60)["ok"]
+        deadline = time.time() + 20
+        while d.stats.cache_prunes < 1:    # piggybacks on the speculator
+            assert time.time() < deadline, "maintenance never ran"
+            time.sleep(0.05)
+    assert d.stats.cache_evictions >= 1    # 1-byte budget evicts everything

@@ -7,10 +7,12 @@ import glob
 import json
 import os
 import threading
+import time
 
 import pytest
 
 from repro.core import CGRA, map_dfg, running_example
+from repro.core.dfg import DFG
 from repro.core.benchsuite import load_suite
 from repro.core.mapper import clear_mapping_cache, ii_slack_windows
 from repro.core.service import (
@@ -328,3 +330,121 @@ def test_cli_deterministic_exit_codes(tmp_path):
 
     assert main(["--bench", "bitcount", "--size", "4", "--jobs", "1",
                  "--deterministic", "--quiet"]) == 0
+
+
+# ------------------------------------------------- disk-cache prune bounds
+
+def _filled_store(tmp_path, n=3):
+    """A store with n entries whose mtimes ascend entry-0 .. entry-(n-1)."""
+    store = DiskMappingCache(str(tmp_path))
+    keys = [store.entry_key(f"dfg{i}", 2, 2, "mesh", "strict", None)
+            for i in range(n)]
+    now = time.time()
+    for i, key in enumerate(keys):
+        store.put(key, 2, [0, 1], [0, 1])
+        # explicit mtimes make LRU order deterministic (oldest = entry 0)
+        os.utime(store._path(key, 2), (now - 1000 + i, now - 1000 + i))
+    return store, keys
+
+
+def test_disk_cache_prune_lru_byte_budget(tmp_path):
+    store, keys = _filled_store(tmp_path)
+    entry_size = os.path.getsize(store._path(keys[0], 2))
+    # budget for exactly one entry: the two oldest must go, newest survives
+    removed = store.prune(max_bytes=entry_size)
+    assert removed == 2
+    assert store.stats.evictions == 2
+    assert len(store) == 1
+    assert store.get(keys[2], 2, 2) is not None     # newest kept
+    assert store.get(keys[0], 2, 2) is None         # oldest evicted
+
+
+def test_disk_cache_prune_age_bound(tmp_path):
+    store, keys = _filled_store(tmp_path)
+    fresh = store.entry_key("fresh", 2, 2, "mesh", "strict", None)
+    store.put(fresh, 2, [0, 1], [0, 1])             # mtime = now
+    removed = store.prune(max_age_s=500)            # backdated trio expires
+    assert removed == 3 and store.stats.evictions == 3
+    assert len(store) == 1
+    assert store.get(fresh, 2, 2) is not None
+
+
+def test_disk_cache_prune_stale_versions_not_counted_as_evictions(tmp_path):
+    store, keys = _filled_store(tmp_path)
+    path = store._path(keys[0], 2)
+    payload = json.load(open(path))
+    payload["version"] = CACHE_VERSION - 1
+    json.dump(payload, open(path, "w"))
+    removed = store.prune()
+    assert removed == 1
+    assert store.stats.evictions == 0   # stale removal is GC, not eviction
+    assert len(store) == 2
+
+
+def test_disk_cache_prune_unbounded_keeps_current_entries(tmp_path):
+    store, _keys = _filled_store(tmp_path)
+    assert store.prune() == 0
+    assert len(store) == 3
+
+
+# ------------------------------------------------------ worker-loss recovery
+
+class KillerDFG(DFG):
+    """A DFG whose ``stable_hash`` kills the worker process mid-job.
+
+    Top-level (fork-picklable) on purpose: pool workers call ``stable_hash``
+    while building the mapping-cache key, i.e. genuinely mid-solve. With a
+    ``sentinel`` path the kill is one-shot — the first call records the
+    sentinel and dies, later calls (the respawned pool) behave normally;
+    without one it kills every pool that touches it. ``delay_s`` lets
+    innocent neighbors finish first so the test's expectations are exact."""
+
+    def __init__(self, base, sentinel=None, delay_s=0.0):
+        super().__init__(num_nodes=base.num_nodes, edges=list(base.edges),
+                         ops=list(base.ops), imms=list(base.imms),
+                         name="killer")
+        self.sentinel = sentinel
+        self.delay_s = delay_s
+
+    def stable_hash(self):
+        if self.sentinel and os.path.exists(self.sentinel):
+            return super().stable_hash()
+        if self.sentinel:
+            open(self.sentinel, "w").close()
+        time.sleep(self.delay_s)
+        os._exit(1)
+
+
+def test_compile_many_respawns_pool_after_worker_death(tmp_path):
+    # a worker dying mid-solve breaks the whole pool; the batch must respawn
+    # it once and finish every job — including the one that killed it
+    suite = load_suite(names=["bitcount", "fft"])
+    killer = KillerDFG(running_example(),
+                       sentinel=str(tmp_path / "sentinel"), delay_s=0.3)
+    batch = [CompileJob(suite["bitcount"], CGRA(4, 4)),
+             CompileJob(suite["fft"], CGRA(4, 4)),
+             CompileJob(killer, CGRA(4, 4))]
+    report = compile_many(batch, jobs=2, deadline_s=30)
+    assert report.ok, [j.reason for j in report.jobs]
+    assert [j.name for j in report.jobs] == ["bitcount", "fft", "killer"]
+    assert all(j.ii is not None for j in report.jobs)
+
+
+def test_compile_many_worker_lost_after_respawn_fails_job_not_batch(tmp_path):
+    # a persistent killer breaks the respawned pool too: its row must come
+    # back failure="worker-lost" while innocent neighbors still succeed
+    from repro.api.result import classify_failure
+
+    suite = load_suite(names=["bitcount", "fft"])
+    killer = KillerDFG(running_example(), sentinel=None, delay_s=0.5)
+    batch = [CompileJob(suite["bitcount"], CGRA(4, 4)),
+             CompileJob(suite["fft"], CGRA(4, 4)),
+             CompileJob(killer, CGRA(4, 4))]
+    report = compile_many(batch, jobs=2, deadline_s=30)
+    assert not report.ok
+    rows = {j.name: j for j in report.jobs}
+    assert rows["bitcount"].ok and rows["fft"].ok
+    lost = rows["killer"]
+    assert not lost.ok
+    assert lost.reason.startswith("worker lost")
+    assert classify_failure(lost.ok, lost.reason, lost.cancelled) == "worker-lost"
